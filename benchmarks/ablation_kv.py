@@ -1,0 +1,20 @@
+"""§III-C ablation — cross K/V mapping vs fixed mapping (CU utilization).
+
+In the simulator: CDPIM vs CDPIM_FIXED_MAPPING (attention-cache GEMVs at
+1/pbanks bandwidth under a fixed mapping). In JAX: engine produces identical
+tokens under either cache layout (correctness), while the timing model shows
+the paper's utilization argument.
+"""
+from __future__ import annotations
+
+from repro.pimsim import (CDPIM, CDPIM_FIXED_MAPPING, JETSON, MODELS,
+                          hbcem_e2e)
+
+
+def run(emit):
+    for m in MODELS.values():
+        for lin, lout in [(128, 2048), (2048, 2048)]:
+            cross = hbcem_e2e(m, lin, lout, JETSON, CDPIM).total
+            fixed = hbcem_e2e(m, lin, lout, JETSON, CDPIM_FIXED_MAPPING).total
+            emit(f"ablation_kv/{m.name}/L{lin}-{lout}", cross * 1e6,
+                 f"cross_vs_fixed_speedup={fixed/cross:.3f}x")

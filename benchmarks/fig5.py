@@ -1,0 +1,41 @@
+"""Fig. 5 — normalized performance, batch=1, HBCEM vs GPU-only and AttAcc.
+
+LLaMA-1B/7B/13B × (Lin, Lout) grid × {Jetson AGX Orin, iPhone 15 Pro}.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.pimsim import (ATTACC, CDPIM, IPHONE, JETSON, MODELS,
+                          gpu_only_e2e, hbcem_e2e)
+
+COMBOS = [(128, 128), (128, 2048), (2048, 128), (2048, 2048)]
+
+
+def rows():
+    out = []
+    for dev in (JETSON, IPHONE):
+        for m in MODELS.values():
+            for lin, lout in COMBOS:
+                g = gpu_only_e2e(m, lin, lout, dev).total
+                h = hbcem_e2e(m, lin, lout, dev, CDPIM).total
+                a = hbcem_e2e(m, lin, lout, dev, ATTACC).total
+                out.append({
+                    "device": dev.name, "model": m.name,
+                    "lin": lin, "lout": lout,
+                    "gpu_s": g, "attacc_s": a, "cdpim_s": h,
+                    "speedup_vs_gpu": g / h, "speedup_vs_attacc": a / h,
+                })
+    return out
+
+
+def run(emit):
+    rs = rows()
+    for r in rs:
+        emit(f"fig5/{r['device']}/{r['model']}/L{r['lin']}-{r['lout']}",
+             r["cdpim_s"] * 1e6,
+             f"vs_gpu={r['speedup_vs_gpu']:.2f}x vs_attacc={r['speedup_vs_attacc']:.2f}x")
+    avg_g = statistics.mean(r["speedup_vs_gpu"] for r in rs)
+    avg_a = statistics.mean(r["speedup_vs_attacc"] for r in rs)
+    emit("fig5/average", 0.0,
+         f"avg_vs_gpu={avg_g:.2f}x(paper 11.42) avg_vs_attacc={avg_a:.2f}x(paper 4.25)")

@@ -1,0 +1,23 @@
+"""Fig. 6 — Jetson AGX Orin, batch=4, Lin=2048: LBIM vs HBCEM speedup."""
+from __future__ import annotations
+
+from repro.pimsim import CDPIM, JETSON, MODELS, hbcem_e2e, lbim_e2e
+
+LOUTS = (2, 8, 32, 128)
+
+
+def rows(dev=JETSON):
+    out = []
+    for m in MODELS.values():
+        for lout in LOUTS:
+            hb = hbcem_e2e(m, 2048, lout, dev, CDPIM, batch=4).total
+            lb = lbim_e2e(m, 2048, lout, dev, CDPIM, batch=4).total
+            out.append({"device": dev.name, "model": m.name, "lout": lout,
+                        "hbcem_s": hb, "lbim_s": lb, "speedup": hb / lb})
+    return out
+
+
+def run(emit):
+    for r in rows():
+        emit(f"fig6/{r['model']}/Lout{r['lout']}", r["lbim_s"] * 1e6,
+             f"lbim_vs_hbcem={r['speedup']:.3f}x")

@@ -1,0 +1,11 @@
+"""Fig. 7 — iPhone 15 Pro, batch=4, Lin=2048: LBIM vs HBCEM speedup."""
+from __future__ import annotations
+
+from benchmarks.fig6 import rows
+from repro.pimsim import IPHONE
+
+
+def run(emit):
+    for r in rows(IPHONE):
+        emit(f"fig7/{r['model']}/Lout{r['lout']}", r["lbim_s"] * 1e6,
+             f"lbim_vs_hbcem={r['speedup']:.3f}x")

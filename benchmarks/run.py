@@ -1,0 +1,44 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import ablation_kv, fig4_timeline, fig5, fig6, fig7, kernel_bench, table_overhead
+
+SUITES = {
+    "fig4": fig4_timeline.run,
+    "fig5": fig5.run,
+    "fig6": fig6.run,
+    "fig7": fig7.run,
+    "overhead": table_overhead.run,
+    "kernel": kernel_bench.run,
+    "ablation_kv": ablation_kv.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.2f},{derived}")
+        sys.stdout.flush()
+
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(emit)
+        except Exception as e:  # keep the suite running
+            emit(f"{name}/ERROR", 0.0, repr(e))
+
+
+if __name__ == "__main__":
+    main()

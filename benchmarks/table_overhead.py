@@ -1,0 +1,17 @@
+"""§IV-C / Fig. 8 — CU area & power overhead table."""
+from __future__ import annotations
+
+from repro.pimsim.overhead import AREA_BREAKDOWN, POWER_BREAKDOWN, cu_overhead
+
+
+def run(emit):
+    rep = cu_overhead()
+    for name, val in rep.rows():
+        emit(f"overhead/{name}", 0.0, f"{val:.4g}")
+    for comp, frac in AREA_BREAKDOWN.items():
+        emit(f"overhead/area_frac/{comp}", 0.0, f"{frac:.2f}")
+    for comp, frac in POWER_BREAKDOWN.items():
+        emit(f"overhead/power_frac/{comp}", 0.0, f"{frac:.2f}")
+    # paper anchors: 14941 um^2, 4.5 mW, 0.8% die, 144 mW total
+    emit("overhead/paper_check", 0.0,
+         f"area_ok={abs(rep.pu_area_um2-14941)<1} power_ok={abs(rep.total_power_mw-144)<1}")

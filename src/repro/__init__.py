@@ -1,0 +1,2 @@
+"""CD-PIM reproduction: LPDDR5-PIM low-batch LLM acceleration, TPU-native."""
+__version__ = "1.0.0"

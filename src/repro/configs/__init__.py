@@ -1,0 +1,25 @@
+"""Architecture registry — importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchEntry,
+    ModelConfig,
+    ShapeSpec,
+    all_cells,
+    get_config,
+    input_specs,
+    list_archs,
+    register,
+    shape_applicable,
+)
+
+# One module per assigned architecture (registration side effect).
+from repro.configs import llama3_8b  # noqa: F401, E402
+from repro.configs import codeqwen15_7b  # noqa: F401, E402
+from repro.configs import yi_9b  # noqa: F401, E402
+from repro.configs import gemma2_27b  # noqa: F401, E402
+from repro.configs import rwkv6_1b6  # noqa: F401, E402
+from repro.configs import internvl2_2b  # noqa: F401, E402
+from repro.configs import olmoe_1b_7b  # noqa: F401, E402
+from repro.configs import phi35_moe  # noqa: F401, E402
+from repro.configs import zamba2_7b  # noqa: F401, E402
+from repro.configs import seamless_m4t_v2  # noqa: F401, E402

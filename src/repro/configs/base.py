@@ -1,0 +1,251 @@
+"""Config system: architecture configs + input-shape specs.
+
+Every assigned architecture gets a ``ModelConfig`` (full size) plus a
+``smoke()`` reduced variant of the same family for CPU tests. Input shapes
+(train_4k / prefill_32k / decode_32k / long_500k) are ``ShapeSpec`` entries;
+``input_specs()`` materializes them as ``jax.ShapeDtypeStruct`` stand-ins so
+the multi-pod dry-run never allocates real buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per assigned arch (plus smoke)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+
+    # --- attention details ------------------------------------------------
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None   # gemma2: 50.0 on attention logits
+    logit_softcap: Optional[float] = None  # gemma2: 30.0 on final logits
+    sliding_window: Optional[int] = None   # gemma2 local layers: 4096
+    local_global_pattern: bool = False     # gemma2: alternate local/global
+    post_block_norm: bool = False          # gemma2: extra post-norms
+    attn_scale_override: Optional[float] = None
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_group_size: int = 4096        # GShard dispatch group size (tokens)
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM / RWKV ---------------------------------------------------------
+    ssm_state: int = 0                # Mamba2 d_state
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0               # zamba2: shared attn block every N ssm blocks
+
+    # --- encoder-decoder / multimodal ----------------------------------------
+    n_encoder_layers: int = 0
+    frontend: Optional[str] = None    # "vision" | "audio" (stubbed embeddings)
+    n_prefix_tokens: int = 0          # vlm: image patch embeds prepended
+
+    # --- misc -----------------------------------------------------------------
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    kv_dtype: str = ""                # "" -> dtype; "float8_e4m3fn" = beyond-paper
+                                      # TPU analogue of the paper's int8 KV cache
+    q_chunk: int = 1024               # query-chunked attention block size
+    causal_block_skip: bool = True    # skip fully-masked KV blocks (beyond-paper opt)
+    seq_parallel: bool = False        # sequence-parallel activations (beyond-paper)
+    windowed_kv_cache: bool = False   # ring-buffer KV for sliding-window layers
+                                      # (beyond-paper: local layers keep only W slots)
+    remat: bool = True                # rematerialize per-layer in train
+    scan_layers: bool = True
+
+    # --- provenance ------------------------------------------------------------
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k requires sub-quadratic sequence mixing."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for MODEL_FLOPS = 6 N D roofline term) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        dense_mlp = 3 * d * f
+        n = 0
+        if self.family in ("dense", "vlm"):
+            n = self.n_layers * (attn + dense_mlp)
+        elif self.family == "moe":
+            e = self.top_k if active_only else self.n_experts
+            n = self.n_layers * (attn + 3 * d * f * e + d * self.n_experts)
+        elif self.family == "ssm":  # rwkv6
+            d_att = d
+            tmix = 5 * d * d_att + d_att * d  # r,k,v,w,g projections + out
+            cmix = 2 * d * f  # rwkv channel-mix has k,v (+r gate ~ d*d)
+            n = self.n_layers * (tmix + cmix + d * d)
+        elif self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            ssm_block = d * 2 * d_in + d_in * d + d_in * (2 * self.ssm_state)
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            n = self.n_layers * ssm_block + (attn + dense_mlp)  # shared attn once
+            n += n_attn * 0  # shared weights: count once
+        elif self.family == "audio":
+            enc = self.n_encoder_layers * (attn + dense_mlp)
+            dec = self.n_layers * (attn * 2 + dense_mlp)  # self + cross attn
+            n = enc + dec
+        n += v * d * (1 if self.tie_embeddings else 2)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input-shape specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (seq_len, global_batch) input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, spec: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch, shape) cell runs; reason recorded in DESIGN.md if not."""
+    if spec.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is full-attention (skip per assignment rules)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — no allocation.
+
+    train:   {tokens, labels[, prefix_embeds | src_frames]}
+    prefill: {tokens[, prefix_embeds | src_frames]}
+    decode:  {tokens(B,1), cache_len=seq_len}  (cache built separately)
+    """
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if spec.kind == "train":
+        if cfg.family == "audio":
+            out["src_frames"] = jax.ShapeDtypeStruct((b, s // 2, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s // 2), i32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s // 2), i32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.family == "vlm":
+                out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_prefix_tokens, cfg.d_model), jnp.bfloat16
+                )
+    elif spec.kind == "prefill":
+        if cfg.family == "audio":
+            out["src_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.family == "vlm":
+                out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_prefix_tokens, cfg.d_model), jnp.bfloat16
+                )
+    else:  # decode: one new token against a cache of length seq_len
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, "ArchEntry"] = {}
+
+
+@dataclass
+class ArchEntry:
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def register(full: ModelConfig, smoke: ModelConfig) -> ModelConfig:
+    _REGISTRY[full.name] = ArchEntry(config=full, smoke=smoke)
+    return full
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers arch module imports)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    entry = _REGISTRY[name]
+    return entry.smoke if smoke else entry.config
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """(arch, shape, applicable, reason) for the full 40-cell matrix."""
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, spec in SHAPES.items():
+            ok, why = shape_applicable(cfg, spec)
+            cells.append((arch, sname, ok, why))
+    return cells

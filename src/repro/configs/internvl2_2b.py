@@ -1,0 +1,36 @@
+"""internvl2-2b — InternViT frontend (stubbed) + InternLM2 backbone [arXiv:2404.16821].
+
+The modality frontend is a STUB per assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, 256, d_model) prepended to the text stream.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1000000.0,
+    n_prefix_tokens=256,
+    source="arXiv:2404.16821",
+)
+
+SMOKE = FULL.replace(
+    name="internvl2-2b-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=128,
+    vocab_size=256,
+    n_prefix_tokens=4,
+    q_chunk=8,
+    remat=False,
+)
+
+register(FULL, SMOKE)

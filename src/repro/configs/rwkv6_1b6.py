@@ -1,0 +1,31 @@
+"""rwkv6-1.6b 'Finch' — attention-free, data-dependent decay [arXiv:2404.05892].
+
+long_500k runs (linear recurrence). The paper's K/V cache mapping is
+inapplicable (no KV cache) — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,  # d_model / 64 wkv heads
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    source="arXiv:2404.05892",
+)
+
+SMOKE = FULL.replace(
+    name="rwkv6-1.6b-smoke",
+    n_layers=2,
+    d_model=128,  # must be a multiple of the 64-wide wkv head
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=256,
+    remat=False,
+)
+
+register(FULL, SMOKE)

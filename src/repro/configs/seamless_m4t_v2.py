@@ -1,0 +1,37 @@
+"""seamless-m4t-large-v2 — encoder-decoder, multimodal [arXiv:2308.11596].
+
+Audio frontend is a STUB per assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S, d_model) as encoder input. 24 encoder +
+24 decoder layers; decode shapes exercise the decoder with self-KV cache and
+fixed cross-attention memory (the encoder pass is the enc-dec "prefill").
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,          # decoder
+    n_encoder_layers=24,  # encoder
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    source="arXiv:2308.11596",
+)
+
+SMOKE = FULL.replace(
+    name="seamless-m4t-large-v2-smoke",
+    n_layers=2,
+    n_encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab_size=256,
+    q_chunk=8,
+    remat=False,
+)
+
+register(FULL, SMOKE)

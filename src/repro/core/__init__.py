@@ -1,0 +1,3 @@
+"""CD-PIM core: the paper's contribution as composable JAX modules."""
+from repro.core.pim_modes import Mode, StepPlan, plan_step  # noqa: F401
+from repro.core import interleave, kv_mapping, quant  # noqa: F401

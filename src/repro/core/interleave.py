@@ -1,0 +1,50 @@
+"""LBIM fused step — decode (memory-bound) + prefill chunk (compute-bound)
+in ONE XLA program.
+
+On CD-PIM the three DRAM commands let two Pbanks serve the processor's GEMM
+reads while the other two feed the CUs' GEMVs. On TPU the analogous overlap
+is intra-program: when the decode batch's GEMV-class ops and the prefill
+chunk's GEMM-class ops live in one jitted computation, XLA's scheduler can
+hide the HBM-bound cache streaming under MXU-bound prefill tiles. The engine
+invokes this for every LBIM step; HBCEM/BLOCKED call the two halves as
+separate programs (the serialization the paper measures against).
+
+Both halves use the same weights — the "two Pbanks each" split is a
+scheduling statement, not a weight copy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fused_step(
+    params: dict,
+    dec_cache: dict,
+    dec_tokens: jax.Array,   # (Bd, 1)  decoding wave
+    pre_cache: dict,
+    pre_tokens: jax.Array,   # (Bp, C)  next wave's prefill chunk
+    cfg: ModelConfig,
+):
+    """Returns (dec_logits, dec_cache', pre_logits, pre_cache')."""
+    dec_logits, dec_cache = M.decode_step(params, dec_cache, dec_tokens, cfg)
+    pre_logits, pre_cache = M.decode_step(params, pre_cache, pre_tokens, cfg)
+    return dec_logits, dec_cache, pre_logits, pre_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decode_only_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
+    return M.decode_step(params, cache, tokens, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prefill_chunk_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
+    """Chunked prefill = multi-token decode step (cache-extending forward)."""
+    return M.decode_step(params, cache, tokens, cfg)

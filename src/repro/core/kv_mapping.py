@@ -1,0 +1,153 @@
+"""KV-cache data mapping — the paper's §III-C, adapted to TPU.
+
+CD-PIM stores the K-cache **column-wise** ``(H_dim, L)`` and the V-cache
+**row-wise** ``(L, H_dim)`` so that the per-bank compute units stay fully
+utilized for both attention GEMVs: the score GEMV runs as an *outer-product*
+flow (each query byte broadcasts against a K row) and the output GEMV as an
+*inner-product* flow (attention-weight sub-vectors contract against V columns).
+
+On TPU the same asymmetry appears in the decode step:
+
+* K stored ``(B, Hkv, hd, L)``: the score contraction ``q · K`` reduces the
+  minor-most ``hd`` axis, and appending the new token's K vector is a single
+  contiguous lane-write at column ``pos`` — the analogue of the paper's
+  "appended (H_dim, 1) column vector" being spread across all CUs instead of
+  landing in one.
+* V stored ``(B, Hkv, L, hd)``: the output contraction ``p · V`` reduces ``L``
+  (major axis), streaming V rows exactly like the paper's inner-product flow.
+
+Both layouts make the hot decode loop a pure streaming read of the cache with
+the small operand (q / attention weights) resident — which is what the CU
+input buffer holds in CD-PIM and what VMEM holds in our Pallas kernel.
+
+The *fixed-mapping* baselines the paper compares against (both row-wise or
+both column-wise) are provided for the ablation benchmark.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Layout = Literal["cdpim", "row_row", "col_col"]
+
+
+def init_cache(
+    n_layers: int,
+    batch: int,
+    n_kv_heads: int,
+    head_dim: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    layout: Layout = "cdpim",
+) -> dict:
+    """Allocate an empty stacked-per-layer KV cache.
+
+    cdpim   : K (L?, B, H, hd, Lmax)  col-wise, V (L?, B, H, Lmax, hd) row-wise
+    row_row : both (.., Lmax, hd)   — conventional fixed mapping
+    col_col : both (.., hd, Lmax)
+    """
+    if layout == "cdpim":
+        k_shape = (n_layers, batch, n_kv_heads, head_dim, max_len)
+        v_shape = (n_layers, batch, n_kv_heads, max_len, head_dim)
+    elif layout == "row_row":
+        k_shape = (n_layers, batch, n_kv_heads, max_len, head_dim)
+        v_shape = (n_layers, batch, n_kv_heads, max_len, head_dim)
+    else:
+        k_shape = (n_layers, batch, n_kv_heads, head_dim, max_len)
+        v_shape = (n_layers, batch, n_kv_heads, head_dim, max_len)
+    return {
+        "k": jnp.zeros(k_shape, dtype),
+        "v": jnp.zeros(v_shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+        "layout": layout,
+    }
+
+
+def cache_specs(
+    n_layers: int,
+    batch: int,
+    n_kv_heads: int,
+    head_dim: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    layout: Layout = "cdpim",
+) -> dict:
+    """ShapeDtypeStruct version of :func:`init_cache` (dry-run, no alloc)."""
+    tree = jax.eval_shape(
+        lambda: init_cache(n_layers, batch, n_kv_heads, head_dim, max_len, dtype, layout)
+    )
+    return tree
+
+
+def _update_dim(cache: jax.Array, upd: jax.Array, pos: jax.Array, axis: int) -> jax.Array:
+    """dynamic_update_slice along `axis`; pos may be scalar or per-batch (B,).
+
+    Per-batch positions (continuous batching: sequences at different fill
+    levels) vmap the update over the leading batch axis.
+    """
+    upd = upd.astype(cache.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, upd, pos, axis=axis)
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(c, u, p, axis=axis - 1)
+    )(cache, upd, pos)
+
+
+def append_layer(
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_new: jax.Array,  # (B, H, T, hd)
+    v_new: jax.Array,  # (B, H, T, hd)
+    pos: jax.Array,    # scalar or (B,) int32
+    layout: Layout = "cdpim",
+) -> tuple[jax.Array, jax.Array]:
+    """Write T new tokens' K/V at position ``pos`` in one layer's cache slices.
+
+    Cache slices here are per-layer: K (B,H,hd,Lmax)|(B,H,Lmax,hd), likewise V.
+    """
+    if layout == "cdpim":
+        k_upd = jnp.swapaxes(k_new, -1, -2)  # (B,H,hd,T) — contiguous col write
+        k_cache = _update_dim(k_cache, k_upd, pos, axis=3)
+        v_cache = _update_dim(v_cache, v_new, pos, axis=2)
+    elif layout == "row_row":
+        k_cache = _update_dim(k_cache, k_new, pos, axis=2)
+        v_cache = _update_dim(v_cache, v_new, pos, axis=2)
+    else:  # col_col
+        k_upd = jnp.swapaxes(k_new, -1, -2)
+        v_upd = jnp.swapaxes(v_new, -1, -2)
+        k_cache = _update_dim(k_cache, k_upd, pos, axis=3)
+        v_cache = _update_dim(v_cache, v_upd, pos, axis=3)
+    return k_cache, v_cache
+
+
+def _upcast(cache: jax.Array, like: jax.Array) -> jax.Array:
+    """f8 caches (beyond-paper int8-KV analogue) upcast at the read; XLA
+    fuses the convert into the contraction so no extra HBM pass occurs."""
+    if cache.dtype != like.dtype and cache.dtype.itemsize < 2:
+        return cache.astype(like.dtype)
+    return cache
+
+
+def read_scores(q: jax.Array, k_cache: jax.Array, layout: Layout = "cdpim") -> jax.Array:
+    """Score GEMV: q (B,Hkv,G,T,hd) × K-cache -> (B,Hkv,G,T,Lmax).
+
+    cdpim/col layouts contract the minor ``hd`` axis (outer-product flow);
+    row layout contracts against (Lmax, hd) rows.
+    """
+    k_cache = _upcast(k_cache, q)
+    if layout in ("cdpim", "col_col"):
+        return jnp.einsum("bkgtd,bkdl->bkgtl", q, k_cache)
+    return jnp.einsum("bkgtd,bkld->bkgtl", q, k_cache)
+
+
+def read_output(p: jax.Array, v_cache: jax.Array, layout: Layout = "cdpim") -> jax.Array:
+    """Output GEMV: probs (B,Hkv,G,T,Lmax) × V-cache -> (B,Hkv,G,T,hd).
+
+    cdpim/row layouts contract the major ``L`` axis (inner-product flow).
+    """
+    v_cache = _upcast(v_cache, p)
+    if layout in ("cdpim", "row_row"):
+        return jnp.einsum("bkgtl,bkld->bkgtd", p, v_cache)
+    return jnp.einsum("bkgtl,bkdl->bkgtd", p, v_cache)

@@ -1,0 +1,47 @@
+"""Operating modes — the paper's Table II instruction set as scheduler policy.
+
+| paper command | meaning on CD-PIM                    | TPU-engine analogue        |
+|---------------|--------------------------------------|----------------------------|
+| PIM_MAC_FM    | all 4 Pbanks GEMV (HBCEM)            | decode-only fused step     |
+| MACT_LDB      | top CU GEMV + processor reads bottom | fused decode+prefill chunk |
+| MACB_LDT      | bottom CU GEMV + processor reads top | (symmetric)                |
+
+``Mode.BLOCKED`` is the prior-PIM baseline the paper argues against: the
+processor and PIM never run concurrently, so prefill of the next request
+waits for all decodes (or vice versa).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class Mode(enum.Enum):
+    BLOCKED = "blocked"   # prior PIM: serialize prefill and decode
+    HBCEM = "hbcem"       # PIM_MAC_FM: decode at full internal bandwidth
+    LBIM = "lbim"         # MACT_LDB/MACB_LDT: overlap decode with prefill
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """What one engine step executes (used by the engine + timing model)."""
+    decode: bool            # run a decode step for active sequences
+    prefill_chunk: int      # tokens of pending-request prefill in this step
+    fused: bool             # both in ONE XLA program (LBIM overlap)
+
+    @property
+    def label(self) -> str:
+        if self.decode and self.prefill_chunk:
+            return "MACT_LDB" if self.fused else "split"
+        if self.decode:
+            return "PIM_MAC_FM"
+        return "LOAD"
+
+
+def plan_step(mode: Mode, have_decodes: bool, have_prefills: bool,
+              chunk: int) -> StepPlan:
+    if mode is Mode.LBIM and have_decodes and have_prefills:
+        return StepPlan(decode=True, prefill_chunk=chunk, fused=True)
+    if have_decodes and (mode is not Mode.BLOCKED or not have_prefills):
+        return StepPlan(decode=True, prefill_chunk=0, fused=False)
+    return StepPlan(decode=False, prefill_chunk=chunk, fused=False)

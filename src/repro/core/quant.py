@@ -1,0 +1,59 @@
+"""INT8 W8A8 quantization — the paper's precision regime (§III, no accuracy
+loss claimed for 8-bit weights + activations).
+
+Weights are quantized per output channel once (offline, weight-stationary in
+the "banks"); activations per row at run time. The quantized linear either
+dispatches to the Pallas ``pim_gemv`` kernel (TPU) or the exact jnp oracle
+(CPU dry-run path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pim_gemv.ops import pim_gemv_int8
+from repro.kernels.pim_gemv.ref import quantize_ref
+
+
+class QuantizedLinear(NamedTuple):
+    w_q: jax.Array      # (N, K) int8
+    w_scale: jax.Array  # (N,) f32
+
+
+def quantize_weight(w: jax.Array) -> QuantizedLinear:
+    """w: (K, N) float (jnp layout) → weight-stationary (N, K) int8."""
+    wq, ws = quantize_ref(w.T, axis=1)
+    return QuantizedLinear(w_q=wq, w_scale=ws)
+
+
+def quantize_params_tree(params, path_suffixes=("wq", "wk", "wv", "wo",
+                                                "w_gate", "w_up", "w_down")):
+    """Quantize every matching 2-D weight leaf of a param tree to int8."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if leaf.ndim == 2 and any(key.endswith(f"['{s}']") for s in path_suffixes):
+            out[key] = quantize_weight(leaf)
+    return out
+
+
+def w8a8_linear(ql: QuantizedLinear, x: jax.Array, *, interpret: bool = False,
+                use_kernel: bool = True) -> jax.Array:
+    """x: (..., K) float → (..., N) f32 through the int8 CU datapath."""
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    x_q, x_s = quantize_ref(x2d, axis=1)
+    y = pim_gemv_int8(ql.w_q, x_q, ql.w_scale, x_s,
+                      interpret=interpret, use_kernel=use_kernel)
+    return y.reshape(*shape[:-1], -1)
+
+
+def quant_error(w: jax.Array, x: jax.Array) -> float:
+    """Relative error of the W8A8 path vs fp32 matmul (accuracy audit)."""
+    ql = quantize_weight(w)
+    y_q = w8a8_linear(ql, x, use_kernel=False)
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return float(jnp.linalg.norm(y_q - y) / jnp.maximum(jnp.linalg.norm(y), 1e-9))

@@ -1,0 +1,116 @@
+"""Fused decode attention with the CD-PIM K-col / V-row cache mapping.
+
+The paper's §III-C maps the K-cache column-wise so the score GEMV runs as an
+outer-product flow, and the V-cache row-wise so the output GEMV runs as an
+inner-product flow — keeping every CU busy for both phases. On TPU the same
+layouts make both phases of flash-decoding stream the cache contiguously:
+
+* grid = (batch, kv_head, L_tiles); the L axis is the sequential (pipelined)
+  grid dim — each step streams one K tile (hd, BL) and one V tile (BL, hd)
+  HBM→VMEM while q (G, hd) and the online-softmax state (m, l, acc) stay
+  resident in VMEM scratch — exactly the CU input/output buffer roles.
+* scores tile:  q (G, hd) @ K (hd, BL)   — contracts the minor hd axis
+  (outer-product flow over K columns);
+* output tile:  p (G, BL) @ V (BL, hd)   — contracts L (inner-product flow
+  over V rows).
+* positions ≥ pos are masked; tiles entirely beyond pos are skipped with
+  @pl.when (the Pbank-disable analogue — no bandwidth spent on dead cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+DEFAULT_BLOCK_L = 512
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_l: int, n_l: int,
+                        scale: float, softcap: float | None):
+    li = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip tiles entirely past the valid prefix (dead Pbanks stay dark)
+    @pl.when(li * block_l < pos)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (hd, BL) column-wise
+        v = v_ref[0, 0].astype(jnp.float32)           # (BL, hd) row-wise
+        s = jax.lax.dot_general(                      # outer-product flow
+            q, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        idx = li * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(idx < pos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(                     # inner-product flow
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(li == n_l - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "scale", "softcap", "interpret"))
+def decode_attention(
+    q: jax.Array,        # (B, Hkv, G, hd)
+    k_cache: jax.Array,  # (B, Hkv, hd, Lmax) column-wise
+    v_cache: jax.Array,  # (B, Hkv, Lmax, hd) row-wise
+    pos: jax.Array,      # scalar int32 — valid prefix length
+    *,
+    scale: float,
+    softcap: float | None = None,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hkv, g, hd = q.shape
+    lmax = k_cache.shape[-1]
+    bl = min(block_l, lmax)
+    if lmax % bl:
+        raise ValueError(f"Lmax={lmax} must divide block_l={bl}")
+    n_l = lmax // bl
+    grid = (b, hkv, n_l)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, block_l=bl, n_l=n_l, scale=scale, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # pos arrives in SMEM ahead of the pipeline
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, l, pos_ref: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd, bl), lambda i, j, l, pos_ref: (i, j, 0, l)),
+            pl.BlockSpec((1, 1, bl, hd), lambda i, j, l, pos_ref: (i, j, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, l, pos_ref: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),      # m: running max
+            pltpu.VMEM((g,), jnp.float32),      # l: running denominator
+            pltpu.VMEM((g, hd), jnp.float32),   # acc: output buffer
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k_cache, v_cache)

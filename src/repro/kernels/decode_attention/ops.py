@@ -1,0 +1,39 @@
+"""Public wrapper: padding + GQA reshape + jnp fallback for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention_op(
+    q: jax.Array,        # (B, Hq, hd) — ungrouped query heads
+    k_cache: jax.Array,  # (B, Hkv, hd, Lmax)
+    v_cache: jax.Array,  # (B, Hkv, Lmax, hd)
+    pos,
+    *,
+    scale: float,
+    softcap: float | None = None,
+    block_l: int = 512,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Returns (B, Hq, hd) float32. Handles GQA grouping and L padding."""
+    b, hq, hd = q.shape
+    hkv = k_cache.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    if not use_kernel:
+        out = decode_attention_ref(qg, k_cache, v_cache, pos, scale, softcap)
+        return out.reshape(b, hq, hd)
+    lmax = k_cache.shape[-1]
+    bl = min(block_l, lmax)
+    rem = (-lmax) % bl
+    if rem:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, 0), (0, rem)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, rem), (0, 0)))
+    out = decode_attention(qg, k_cache, v_cache, pos, scale=scale,
+                           softcap=softcap, block_l=bl, interpret=interpret)
+    return out.reshape(b, hq, hd)

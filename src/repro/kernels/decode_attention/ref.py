@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for fused decode attention with CD-PIM KV mapping."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, Hkv, G, hd) — grouped query heads
+    k_cache: jnp.ndarray,  # (B, Hkv, hd, Lmax) — column-wise (paper §III-C)
+    v_cache: jnp.ndarray,  # (B, Hkv, Lmax, hd) — row-wise
+    pos: jnp.ndarray | int,  # number of valid cache entries (attend to [0, pos))
+    scale: float,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Returns (B, Hkv, G, hd) float32."""
+    lmax = k_cache.shape[-1]
+    # outer-product flow: contract hd against K columns
+    s = jnp.einsum("bkgd,bkdl->bkgl", q.astype(jnp.float32), k_cache.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(lmax) < pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # inner-product flow: contract L against V rows
+    return jnp.einsum("bkgl,bkld->bkgd", p, v_cache.astype(jnp.float32))

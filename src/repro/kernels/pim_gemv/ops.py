@@ -1,0 +1,50 @@
+"""Jit'd public wrapper for the PIM GEMV kernel: quantize-and-run + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pim_gemv.pim_gemv import pim_gemv
+from repro.kernels.pim_gemv.ref import pim_gemv_ref, quantize_ref
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads)
+
+
+def pim_gemv_int8(w_q: jax.Array, x_q: jax.Array, w_scale: jax.Array, x_scale: jax.Array,
+                  *, block_n: int = 256, block_k: int = 512,
+                  interpret: bool = False, use_kernel: bool = True) -> jax.Array:
+    """(N,K) int8 × (B,K) int8 → (B,N) f32 with automatic block padding.
+
+    ``use_kernel=False`` falls back to the jnp oracle (the dry-run path on
+    CPU backends where Pallas TPU lowering is unavailable).
+    """
+    n, k = w_q.shape
+    if not use_kernel:
+        return pim_gemv_ref(w_q, x_q, w_scale, x_scale)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    wp = _pad_to(_pad_to(w_q, 0, bn), 1, bk)
+    xp = _pad_to(x_q, 1, bk)
+    wsp = _pad_to(w_scale, 0, bn)
+    out = pim_gemv(wp, xp, wsp, x_scale, block_n=bn, block_k=bk, interpret=interpret)
+    return out[:, :n]
+
+
+def linear_w8a8(w: jax.Array, x: jax.Array, *, interpret: bool = False,
+                use_kernel: bool = True) -> jax.Array:
+    """Float-in/float-out W8A8 linear: quantize both sides, int8 GEMV, dequant.
+
+    This is the paper's INT8 weight+activation decode path as one op.
+    w: (N, K) float; x: (B, K) float → (B, N) float32.
+    """
+    w_q, w_s = quantize_ref(w, axis=1)
+    x_q, x_s = quantize_ref(x, axis=1)
+    return pim_gemv_int8(w_q, x_q, w_s, x_s, interpret=interpret, use_kernel=use_kernel)

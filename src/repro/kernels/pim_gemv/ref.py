@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the PIM GEMV kernel (INT8 W8A8, per-channel scales)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pim_gemv_ref(w: jnp.ndarray, x: jnp.ndarray, w_scale: jnp.ndarray,
+                 x_scale: jnp.ndarray) -> jnp.ndarray:
+    """w: (N, K) int8; x: (B, K) int8; w_scale: (N,) f32; x_scale: (B,) f32.
+
+    Returns (B, N) float32 = (x_i32 @ w_i32.T) * x_scale[:,None] * w_scale[None,:]
+    with exact int32 accumulation — the CU's MAC-pipeline semantics.
+    """
+    acc = jnp.einsum("bk,nk->bn", x.astype(jnp.int32), w.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+
+
+def quantize_ref(a: jnp.ndarray, axis: int = -1):
+    """Symmetric per-row int8 quantization: returns (q_int8, scale_f32)."""
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(a.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis)

@@ -1,0 +1,28 @@
+"""Wrapper for the SSD scan kernel with jnp fallback + chunk padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def ssd_scan_op(x, a, b, c, s0=None, *, chunk: int = 256,
+                interpret: bool = False, use_kernel: bool = True):
+    bb, t, h, p = x.shape
+    n = b.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((bb, h, p, n), jnp.float32)
+    if not use_kernel:
+        return ssd_scan_ref(x, a, b, c, s0)
+    q = min(chunk, t)
+    rem = (-t) % q
+    if rem:
+        # pad with zero-input, zero-decay steps (a=0 → exp(0)=1 keeps state)
+        x = jnp.pad(x, ((0, 0), (0, rem), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, rem), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, rem), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, rem), (0, 0)))
+    y, s_fin = ssd_scan(x, a, b, c, s0, chunk=q, interpret=interpret)
+    return y[:, :t], s_fin

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, a, b, c, s0):
+    """Sequential SSD recurrence (the definition, O(T) steps).
+
+    x: (B,T,H,P) dt-scaled inputs; a: (B,T,H) per-step log decay (<=0);
+    b, c: (B,T,N); s0: (B,H,P,N) f32.
+    Returns y (B,T,H,P) f32, s_final (B,H,P,N) f32.
+    """
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp  # (B,H,P) (B,H) (B,N) (B,N)
+        s = s * jnp.exp(at)[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (zamba2 long-context).
+
+Grid = (batch, head, chunk) with the chunk axis sequential: each step streams
+one (Q, P) input tile + (Q, N) B/C tiles HBM→VMEM, runs the matmul-form
+intra-chunk computation on the MXU, and carries the (P, N) SSD state in VMEM
+scratch — the state plays the CU output-buffer role (resident partial sums)
+while the inputs stream past it, mirroring the CD-PIM pipelined-weight-feed
+structure for a recurrence instead of a GEMV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sout_ref, state_ref,
+                *, n_chunks: int, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)   # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    b = b_ref[0].astype(jnp.float32)            # (Q, N)
+    c = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    al = jnp.cumsum(a)                           # (Q,) cumulative log decay
+    # intra-chunk: L[t,s] = exp(al_t - al_s) for s<=t
+    ldiff = al[:, None] - al[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(col <= row, jnp.exp(ldiff), 0.0)
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    y_intra = jax.lax.dot_general(g * lmat, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: carried state contribution
+    s = state_ref[...]                           # (P, N)
+    cs = jax.lax.dot_general(c, s, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, P)
+    y = y_intra + jnp.exp(al)[:, None] * cs
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(al_Q) S + sum_s exp(al_Q - al_s) x_s ⊗ b_s
+    decay_to_end = jnp.exp(al[-1] - al)          # (Q,)
+    xb = jax.lax.dot_general(x * decay_to_end[:, None], b,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = s * jnp.exp(al[-1]) + xb
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sout_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+             s0: jax.Array, *, chunk: int = 256, interpret: bool = False):
+    """x (B,T,H,P); a (B,T,H); b,c (B,T,N); s0 (B,H,P,N) →
+    y (B,T,H,P) f32, s_final (B,H,P,N) f32."""
+    bb, t, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, t)
+    if t % q:
+        raise ValueError(f"T={t} must divide chunk={q}")
+    n_chunks = t // q
+    grid = (bb, h, n_chunks)
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j, ci: (i, ci, j, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j, ci: (i, ci, j)),
+            pl.BlockSpec((1, q, n), lambda i, j, ci: (i, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda i, j, ci: (i, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, ci: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j, ci: (i, ci, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, ci: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, t, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bb, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c, s0)

@@ -1,0 +1,243 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the very first two lines — before any other import, jax locks the
+device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs, shape_applicable  # noqa: E402
+from repro.dist import sharding as shard_lib  # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.train.optimizer import AdamWConfig, init_opt_state  # noqa: E402
+from repro.train.train_step import train_step  # noqa: E402
+
+AUDIO_CROSS_LEN = 4096  # stub audio memory length for decode shapes
+TRAIN_ACCUM = 4         # microbatches per step (gradient accumulation)
+DONATE = True           # donate params/opt (train) and cache (decode)
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?,?\s*)+)"
+    r"\s*(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective kind (result-shape estimate;
+    all-reduce counted 2x for the ring reduce+broadcast phases)."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s+(.*?)\s+(all-reduce|all-gather|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = 0.0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] = out.get(kind, 0.0) + nbytes * factor
+        counts[kind] = counts.get(kind, 0) + 1
+    out["_counts"] = counts
+    return out
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, arg_specs, in_shardings, out_shardings) for jit+lower."""
+    return build_cell_with_cfg(get_config(arch), shape, mesh)
+
+
+def build_cell_with_cfg(cfg, shape: str, mesh):
+    spec = SHAPES[shape]
+    ba = batch_axes(mesh)
+    params_spec = M.param_specs(cfg)
+    p_sh = shard_lib.param_shardings(params_spec, mesh)
+
+    if spec.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_spec = jax.eval_shape(init_opt_state, params_spec)
+        o_sh = shard_lib.opt_state_shardings(opt_spec, mesh)
+        batch = input_specs(cfg, spec)
+        b_sh = shard_lib.batch_shardings(cfg, spec, mesh, batch)
+        accum = TRAIN_ACCUM  # production microbatching (memory roofline lever)
+
+        def fn(params, opt_state, b):
+            return train_step(params, opt_state, b, cfg, opt_cfg, accum)
+
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, shard_lib.replicated(mesh))
+        args = (params_spec, opt_spec, batch)
+        return fn, args, in_sh, out_sh
+
+    if spec.kind == "prefill":
+        batch = input_specs(cfg, spec)
+        b_sh = shard_lib.batch_shardings(cfg, spec, mesh, batch)
+        max_len = spec.seq_len + cfg.n_prefix_tokens + 64
+        cache_spec = jax.eval_shape(
+            lambda b: M.init_decode_cache(cfg, spec.global_batch, max_len,
+                                          src_len=spec.seq_len if cfg.family == "audio" else 0),
+            batch)
+        c_sh = shard_lib.cache_shardings(cfg, spec, mesh, cache_spec)
+
+        def fn(params, b):
+            return M.prefill(params, b, cfg, max_len)
+
+        vocab_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        logits_sh = NamedSharding(mesh, P(ba, None, vocab_ax))
+        return fn, (params_spec, batch), (p_sh, b_sh), (logits_sh, c_sh)
+
+    # decode: one token against a cache of seq_len
+    batch = input_specs(cfg, spec)
+    b_sh = shard_lib.batch_shardings(cfg, spec, mesh, batch)
+    max_len = spec.seq_len
+    src = AUDIO_CROSS_LEN if cfg.family == "audio" else 0
+    cache_spec = jax.eval_shape(
+        lambda: M.init_decode_cache(cfg, spec.global_batch, max_len, src_len=src))
+    cache_spec["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    c_sh = shard_lib.cache_shardings(cfg, spec, mesh, cache_spec)
+
+    def fn(params, cache, b):
+        return M.decode_step(params, cache, b["tokens"], cfg)
+
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    vocab_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    logits_sh = NamedSharding(
+        mesh, P(ba if spec.global_batch % nb == 0 else None, None, vocab_ax))
+    return fn, (params_spec, cache_spec, batch), (p_sh, c_sh, b_sh), (logits_sh, c_sh)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    ok, why = shape_applicable(cfg, spec)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_cell(arch, shape, mesh)
+        donate = ()
+        if DONATE:
+            donate = (0, 1) if spec.kind == "train" else \
+                     ((1,) if spec.kind == "decode" else ())
+        with mesh:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_d = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            cost = {k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and k in
+                    ("flops", "bytes accessed", "transcendentals",
+                     "bytes accessed output", "optimal_seconds")}
+        except Exception as e:
+            cost = {"error": str(e)}
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        print(compiled.memory_analysis() if not isinstance(mem_d.get("error"), str) else mem_d)
+        print({k: v for k, v in cost.items()})
+        return {
+            "arch": arch, "shape": shape, "multi_pod": multi_pod,
+            "status": "ok", "n_devices": mesh.devices.size,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem_d, "cost": cost, "collectives": coll,
+        }
+    except Exception as e:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = [args.multi_pod] if not args.all else [False, True]
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for a, s, mp in cells:
+        key = f"{a}|{s}|{'multipod' if mp else 'pod'}"
+        if results.get(key, {}).get("status") == "ok" or \
+           results.get(key, {}).get("status") == "skipped":
+            print(f"[skip cached] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        res = run_cell(a, s, mp)
+        results[key] = res
+        print(f"  -> {res['status']} "
+              f"({res.get('compile_s', '?')}s compile)" if res["status"] == "ok"
+              else f"  -> {res['status']}: {res.get('reason', res.get('error'))}",
+              flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

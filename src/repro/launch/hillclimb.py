@@ -1,0 +1,140 @@
+"""Perf hillclimbing driver: hypothesis → change → re-lower → re-analyse.
+
+Each iteration re-runs the scan-corrected cost measurement (and the
+production-config dry-run for memory capacity) with a config override, then
+appends {cell, change, hypothesis, before, after, verdict} to
+``results/perf_iterations.json``. EXPERIMENTS.md §Perf is generated from
+that log.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch llama3-8b --shape decode_32k \
+      --change kv_dtype=float8_e4m3fn \
+      --hypothesis "f8 KV halves cache bytes -> memory term -45%"
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import costrun, dryrun      # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+LOG = "results/perf_iterations.json"
+
+
+def _parse_overrides(items):
+    out = {}
+    for it in items:
+        k, v = it.split("=", 1)
+        if v in ("true", "True"):
+            v = True
+        elif v in ("false", "False"):
+            v = False
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def terms(cost: dict) -> dict:
+    coll = sum(v for v in cost.get("collectives", {}).values())
+    return {
+        "t_compute_s": cost["flops"] / PEAK_FLOPS,
+        "t_memory_s": cost["bytes"] / HBM_BW,
+        "t_collective_s": coll / LINK_BW,
+        "flops": cost["flops"], "bytes": cost["bytes"], "collective_bytes": coll,
+    }
+
+
+def memory_capacity(arch: str, shape: str, overrides: dict | None) -> dict:
+    """Production (scanned) compile on the single-pod mesh: does it fit?"""
+    overrides = dict(overrides or {})
+    accum = overrides.pop("train_accum", None)
+    if accum is not None:
+        dryrun.TRAIN_ACCUM = int(accum)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = make_production_mesh(multi_pod=False)
+    spec = SHAPES[shape]
+    fn, args, in_sh, out_sh = dryrun.build_cell_with_cfg(cfg, shape, mesh)
+    donate = (0, 1) if spec.kind == "train" else ((1,) if spec.kind == "decode" else ())
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    m = compiled.memory_analysis()
+    return {
+        "argument_gb": m.argument_size_in_bytes / 1e9,
+        "temp_gb": m.temp_size_in_bytes / 1e9,
+        "output_gb": m.output_size_in_bytes / 1e9,
+        "alias_gb": m.alias_size_in_bytes / 1e9,
+        "live_gb": (m.argument_size_in_bytes + m.temp_size_in_bytes
+                    + m.output_size_in_bytes - m.alias_size_in_bytes) / 1e9,
+    }
+
+
+def measure(arch: str, shape: str, overrides: dict | None):
+    cost_overrides = dict(overrides or {})
+    cost_overrides.pop("train_accum", None)  # accum is capacity-only
+    cost = costrun.run_cell(arch, shape, cost_overrides or None)
+    assert cost["status"] == "ok", cost
+    t = terms(cost)
+    t["memory_capacity"] = memory_capacity(arch, shape, overrides)
+    return t
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--change", nargs="*", default=[])
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--baseline-only", action="store_true")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.change)
+
+    log = []
+    if os.path.exists(LOG):
+        with open(LOG) as f:
+            log = json.load(f)
+
+    before = measure(args.arch, args.shape, None)
+    entry = {"cell": f"{args.arch}|{args.shape}", "change": overrides,
+             "hypothesis": args.hypothesis, "before": before}
+    if not args.baseline_only:
+        after = measure(args.arch, args.shape, overrides)
+        entry["after"] = after
+        dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                  key=lambda k: before[k])
+        delta = after[dom] / before[dom] - 1
+        entry["dominant_term"] = dom
+        entry["delta_dominant"] = delta
+        entry["verdict"] = "confirmed" if delta < -0.05 else (
+            "neutral" if abs(delta) <= 0.05 else "refuted")
+        print(f"{entry['cell']} {overrides}: {dom} {before[dom]*1e3:.1f}ms -> "
+              f"{after[dom]*1e3:.1f}ms ({delta*100:+.1f}%) => {entry['verdict']}")
+        print(f"  capacity: {before['memory_capacity']['live_gb']:.1f} -> "
+              f"{after['memory_capacity']['live_gb']:.1f} GB/dev")
+    log.append(entry)
+    os.makedirs("results", exist_ok=True)
+    with open(LOG, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis composes
+with ``data`` for pure data parallelism across pods (gradient all-reduce
+crosses the inter-pod links once per step; decode never crosses pods).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 device; only dryrun.py sets
+XLA_FLAGS for 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes the global batch shards over (pod folds into data parallelism)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

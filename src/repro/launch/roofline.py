@@ -1,0 +1,131 @@
+"""Roofline analysis: three terms per (arch × shape) from the dry-run.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from launch/costrun.py (scan-corrected
+differential measurement — see that module); collective bytes likewise,
+with all-reduce counted 2× (ring reduce+broadcast phases). All are
+per-device numbers from the partitioned program; multiplying by `chips`
+and dividing by `chips × rate` cancels, so terms are computed directly as
+per_device_quantity / per_chip_rate.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train; 2·N·D for
+inference steps — the "useful" fraction of compiled compute.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import SHAPES, get_config, shape_applicable
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+N_CHIPS = 256            # single-pod roofline
+
+
+def model_flops_per_device(arch: str, shape: str, n_chips: int = N_CHIPS) -> float:
+    """Useful model FLOPs per device per step (6ND train / 2ND per token)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if spec.kind == "train":
+        tokens = spec.seq_len * spec.global_batch
+        total = 6.0 * n_active * tokens
+    elif spec.kind == "prefill":
+        tokens = spec.seq_len * spec.global_batch
+        total = 2.0 * n_active * tokens
+        # + attention score/value FLOPs (causal): 2 * 2 * L * d * S^2/2 ... folded
+        if cfg.family not in ("ssm",):
+            hd = cfg.head_dim
+            total += 2.0 * cfg.n_layers * cfg.n_heads * hd * spec.seq_len ** 2 \
+                * spec.global_batch  # qk + pv, halved by causality, x2 ops
+    else:  # decode: one token each, plus KV-cache GEMVs over context
+        total = 2.0 * n_active * spec.global_batch
+        if cfg.family not in ("ssm",):
+            hd = cfg.head_dim
+            n_attn = cfg.n_layers if cfg.family != "hybrid" else cfg.n_layers // max(cfg.attn_every, 1)
+            total += 4.0 * n_attn * cfg.n_heads * hd * spec.seq_len * spec.global_batch
+    return total / n_chips
+
+
+def analyze(costs: dict, dryrun: dict) -> list[dict]:
+    rows = []
+    for arch_shape, c in sorted(costs.items()):
+        arch, shape = arch_shape.split("|")
+        cfg = get_config(arch)
+        spec = SHAPES[shape]
+        ok, why = shape_applicable(cfg, spec)
+        if not ok or c.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape,
+                         "status": c.get("status", "?"),
+                         "reason": c.get("reason", c.get("error", ""))})
+            continue
+        t_comp = c["flops"] / PEAK_FLOPS
+        t_mem = c["bytes"] / HBM_BW
+        coll_bytes = sum(v for k, v in c.get("collectives", {}).items())
+        t_coll = coll_bytes / LINK_BW
+        dominant = max((("compute", t_comp), ("memory", t_mem),
+                        ("collective", t_coll)), key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(arch, shape)
+        dr = dryrun.get(f"{arch}|{shape}|pod", {})
+        mem = (dr.get("memory") or {})
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+            "dominant": dominant,
+            "bound_s": max(t_comp, t_mem, t_coll),
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": c["flops"],
+            "useful_flops_ratio": mf / max(c["flops"], 1.0),
+            "roofline_fraction": t_comp / max(t_comp, t_mem, t_coll),
+            "hbm_gb_per_dev": ((mem.get("argument_bytes") or 0)
+                               + (mem.get("temp_bytes") or 0)
+                               + (mem.get("output_bytes") or 0)) / 1e9 or None,
+        })
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':25s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collective':>11s} {'dominant':>10s} {'useful%':>8s} {'roofl%':>7s} {'HBM GB':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:25s} {r['shape']:12s} [{r['status']}] {r.get('reason','')[:60]}")
+            continue
+        out.append(
+            f"{r['arch']:25s} {r['shape']:12s} {r['t_compute_s']*1e3:9.2f}ms "
+            f"{r['t_memory_s']*1e3:9.2f}ms {r['t_collective_s']*1e3:10.2f}ms "
+            f"{r['dominant']:>10s} {100*r['useful_flops_ratio']:7.1f}% "
+            f"{100*r['roofline_fraction']:6.1f}% "
+            f"{(r['hbm_gb_per_dev'] or 0):7.1f}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--costs", default="results/costs.json")
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    with open(args.costs) as f:
+        costs = json.load(f)
+    dr = {}
+    if os.path.exists(args.dryrun):
+        with open(args.dryrun) as f:
+            dr = json.load(f)
+    rows = analyze(costs, dr)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

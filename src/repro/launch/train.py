@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch llama3-8b --smoke``.
+
+On a real cluster each host runs this with jax.distributed initialized by the
+scheduler; here the same code runs single-host. Fault tolerance: checkpoints
+auto-resume (see repro.train.checkpoint), data is a pure function of step, so
+preemption at any point replays exactly.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.train.data import DataConfig
+from repro.train.loop import TrainConfig, run
+from repro.train.optimizer import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.global_batch)
+    tc = TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        accum=args.accum,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                        total_steps=args.steps),
+    )
+    _, _, hist = run(cfg, dc, tc)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f}) over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

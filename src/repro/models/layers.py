@@ -1,0 +1,150 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings (pure-JAX, functional).
+
+Params are plain dict pytrees. Each layer is an ``init_*`` + ``apply`` pair.
+All matmuls accept stacked leading layer axes so models can ``lax.scan`` over
+layers (critical for dry-run compile time on the 512-device mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (scale if scale is not None else 1.0) / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5, gemma_style: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if gemma_style:  # gemma: (1 + scale)
+        scale = 1.0 + scale - 1.0 if False else 1.0 + (scale - 1.0)  # keep identity init
+    return (xf * scale).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    if act == "silu":
+        g = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    elif act == "gelu":
+        g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return (g * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    return {"w": embed_init(key, (vocab, d), dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return p["w"][tokens]
+
+
+def init_lm_head(key, d: int, vocab: int, dtype) -> dict:
+    return {"w": dense_init(key, (d, vocab), dtype)}
+
+
+def lm_head(p: dict, x: jax.Array, softcap: Optional[float] = None) -> jax.Array:
+    logits = (x @ p["w"]).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def lm_head_tied(embed_p: dict, x: jax.Array, softcap: Optional[float] = None) -> jax.Array:
+    logits = (x @ embed_p["w"].T).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def token_shift(x: jax.Array) -> jax.Array:
+    """RWKV-style shift-right-by-one along the time axis of (B, T, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]

@@ -1,0 +1,813 @@
+"""Unified model zoo: init / train-forward / prefill / decode for 5 families.
+
+Families
+--------
+dense | vlm : pre-norm transformer, GQA + RoPE (+ gemma2 local/global,
+              softcaps, post-norms; vlm prepends stub patch embeddings)
+moe         : dense attention + top-k MoE FFN (GShard capacity dispatch)
+ssm         : RWKV6 (attention-free; wkv state decode)
+hybrid      : Mamba2 backbone + ONE shared attention/MLP block applied every
+              ``attn_every`` layers (Zamba2 weight-sharing scheme)
+audio       : encoder-decoder (bidirectional encoder over stub frames,
+              causal decoder with cross-attention)
+
+Implementation notes
+--------------------
+* Layers are **stacked** and iterated with ``lax.scan`` — one layer body in
+  the HLO regardless of depth, which keeps the 512-device dry-run compile
+  tractable.
+* Decode carries the whole stacked KV cache through the scan **as carry** and
+  updates layer ``i`` in place with ``dynamic_update_index_in_dim`` — XLA
+  aliases the buffer, so a decode step streams the cache exactly once
+  (the CD-PIM GEMV traffic pattern).
+* The loss never materializes (B, S, V) logits: it scans over sequence chunks
+  (vocab up to 256k × 1M tokens would not fit otherwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_mapping
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+
+def _init_dense_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(k1, cfg),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_block_norm:
+        p["post_attn_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["post_mlp_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def _init_encdec_layer(key, cfg: ModelConfig, cross: bool) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(k1, cfg),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cross:
+        p["cross_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["cross_attn"] = attn_lib.init_attention(k3, cfg)
+    return p
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    params: dict[str, Any] = {"embed": L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        layer_keys = jax.random.split(ks[1], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_dense_layer(k, cfg))(layer_keys)
+    elif cfg.family == "ssm":  # rwkv6
+        layer_keys = jax.random.split(ks[1], cfg.n_layers)
+
+        def init_rwkv_layer(k):
+            return {
+                "block": rwkv_lib.init_rwkv_block(k, cfg),
+                "ln1": L.init_layernorm(cfg.d_model, dtype),
+                "ln2": L.init_layernorm(cfg.d_model, dtype),
+            }
+
+        params["layers"] = jax.vmap(init_rwkv_layer)(layer_keys)
+        params["ln_in"] = L.init_layernorm(cfg.d_model, dtype)
+    elif cfg.family == "hybrid":  # zamba2
+        layer_keys = jax.random.split(ks[1], cfg.n_layers)
+
+        def init_mamba_layer(k):
+            return {
+                "norm": L.init_rmsnorm(cfg.d_model, dtype),
+                "ssm": ssm_lib.init_ssm(k, cfg),
+            }
+
+        params["mamba_layers"] = jax.vmap(init_mamba_layer)(layer_keys)
+        params["shared_attn"] = _init_dense_layer(ks[2], cfg.replace(family="dense"))
+    elif cfg.family == "audio":  # seamless enc-dec
+        enc_keys = jax.random.split(ks[1], cfg.n_encoder_layers)
+        dec_keys = jax.random.split(ks[2], cfg.n_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _init_encdec_layer(k, cfg, cross=False))(enc_keys)
+        params["dec_layers"] = jax.vmap(lambda k: _init_encdec_layer(k, cfg, cross=True))(dec_keys)
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_lm_head(ks[3], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Abstract param tree (ShapeDtypeStruct) — no allocation."""
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg), rng)
+
+
+def maybe_scan(body, carry, xs, *, scan: bool):
+    """lax.scan, or a python-unrolled loop when ``scan=False``.
+
+    The unrolled form exists for COST MEASUREMENT: XLA's HloCostAnalysis
+    counts a while-loop body once regardless of trip count, so the roofline
+    pipeline (launch/costrun.py) lowers reduced-depth unrolled variants and
+    extrapolates. Production always scans (compile time at 512 devices).
+    """
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _layer_flags(cfg: ModelConfig) -> jax.Array:
+    """Per-layer sliding-window flags: 1 -> local (windowed), 0 -> global."""
+    if cfg.local_global_pattern:
+        return (jnp.arange(cfg.n_layers) % 2 == 0).astype(jnp.int32)
+    if cfg.sliding_window is not None:
+        return jnp.ones((cfg.n_layers,), jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def _window_for(cfg: ModelConfig, flag) -> Optional[int]:
+    return cfg.sliding_window
+
+
+# ===========================================================================
+# dense / vlm / moe blocks
+# ===========================================================================
+
+
+def _sp_constraint(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequence parallelism (beyond-paper, Korthikanti et al.): between
+    blocks, activations shard their SEQUENCE dim over `model`, so the
+    Megatron all-reduce pair becomes reduce-scatter + all-gather — half the
+    collective bytes, and norms/residuals run on 1/model_size of the tokens."""
+    if not cfg.seq_parallel or x.ndim != 3 or x.shape[1] < 16:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(P.UNCONSTRAINED, "model", P.UNCONSTRAINED)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no ambient mesh (single-device tests)
+
+
+def _dense_block(lp: dict, x: jax.Array, cfg: ModelConfig, flag: jax.Array,
+                 positions: Optional[jax.Array] = None, return_kv: bool = False):
+    x = _sp_constraint(x, cfg)
+    h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+    if cfg.sliding_window is not None:
+        # gemma2-style: per-layer dynamic window width selected by flag
+        out = _windowed_attn(lp, h, cfg, flag, positions, return_kv)
+    else:
+        out = attn_lib.attention_dense(lp["attn"], h, cfg, positions=positions, return_kv=return_kv)
+    if return_kv:
+        a, kv = out
+    else:
+        a, kv = out, None
+    if cfg.post_block_norm:
+        a = L.rmsnorm(lp["post_attn_norm"], a, cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m = moe_lib.moe(lp["moe"], h, cfg, impl=cfg_moe_impl(cfg))
+    else:
+        m = L.mlp(lp["mlp"], h)
+    if cfg.post_block_norm:
+        m = L.rmsnorm(lp["post_mlp_norm"], m, cfg.norm_eps)
+    x = x + m
+    return (x, kv) if return_kv else x
+
+
+def _windowed_attn(lp, h, cfg, flag, positions, return_kv):
+    """gemma2 alternating local/global — both branches share weights; the
+    mask width is selected by the per-layer flag (scan-compatible)."""
+    t = h.shape[1]
+    dyn_window = jnp.where(flag > 0, cfg.sliding_window, t + 1)
+
+    # attention_dense applies a static window; emulate the dynamic one by
+    # passing window through the bias built here.
+    b = h.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q, k, v = attn_lib._project_qkv(lp["attn"], h, cfg, positions)
+    g = cfg.q_per_kv
+    qg = q.reshape(b, cfg.n_kv_heads, g, t, cfg.head_dim)
+    scale = attn_lib._scale(cfg)
+    cq = min(cfg.q_chunk, t)
+    if t % cq != 0:
+        cq = t
+    n_chunks = t // cq
+    outs = []
+    for i in range(n_chunks):
+        qs = jax.lax.dynamic_slice_in_dim(qg, i * cq, cq, axis=3)
+        klen = (i + 1) * cq if cfg.causal_block_skip else t
+        ks, vs = k[:, :, :klen, :], v[:, :, :klen, :]
+        q_pos = i * cq + jnp.arange(cq)
+        k_pos = jnp.arange(klen)
+        s = jnp.einsum("bkgtd,bksd->bkgts", qs, ks).astype(jnp.float32) * scale
+        s = L.softcap(s, cfg.attn_softcap)
+        ok = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] > q_pos[:, None] - dyn_window)
+        s = s + jnp.where(ok, 0.0, attn_lib.NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(h.dtype)
+        outs.append(jnp.einsum("bkgts,bksd->bkgtd", pr, vs))
+    y = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    y = y.reshape(b, cfg.n_heads, t, cfg.head_dim).transpose(0, 2, 1, 3).reshape(b, t, -1)
+    out = y @ lp["attn"]["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cfg_moe_impl(cfg: ModelConfig) -> str:
+    return "einsum"
+
+
+def _dense_block_decode(lp, x, kc, vc, pos, cfg: ModelConfig, flag):
+    h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+    window = None
+    if cfg.sliding_window is not None:
+        if cfg.local_global_pattern:
+            # per-layer dynamic width: local layers window, global layers "inf"
+            window = jnp.where(flag > 0, cfg.sliding_window, jnp.int32(2**30))
+        else:
+            window = cfg.sliding_window
+    a, kc, vc = attn_lib.attention_decode(lp["attn"], h, kc, vc, pos, cfg, window=window)
+    if cfg.post_block_norm:
+        a = L.rmsnorm(lp["post_attn_norm"], a, cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m = moe_lib.moe(lp["moe"], h, cfg, impl=cfg_moe_impl(cfg))
+    else:
+        m = L.mlp(lp["mlp"], h)
+    if cfg.post_block_norm:
+        m = L.rmsnorm(lp["post_mlp_norm"], m, cfg.norm_eps)
+    return x + m, kc, vc
+
+
+# ===========================================================================
+# backbone forward (train / prefill)
+# ===========================================================================
+
+
+def _scan_layers(params, x, cfg: ModelConfig, collect_kv: bool = False):
+    flags = _layer_flags(cfg)
+
+    if collect_kv:
+        def body(h, xs):
+            lp, flag = xs
+            h, kv = _dense_block(lp, h, cfg, flag, return_kv=True)
+            return h, kv
+
+        x, kvs = maybe_scan(body, x, (params["layers"], flags), scan=cfg.scan_layers)
+        return x, kvs
+
+    def body(h, xs):
+        lp, flag = xs
+        return _dense_block(lp, h, cfg, flag), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body_fn, x, (params["layers"], flags), scan=cfg.scan_layers)
+    return x, None
+
+
+def _rwkv_forward(params, x, cfg: ModelConfig, states=None, collect_state=False):
+    x = L.layernorm(params["ln_in"], x, cfg.norm_eps)
+    b = x.shape[0]
+    if states is None:
+        st0 = rwkv_lib.init_rwkv_state(b, cfg)
+        states = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st0)
+
+    def body(h, xs):
+        lp, st = xs
+        h, st2 = rwkv_lib.rwkv_block(lp["block"], h, st, cfg, lp["ln1"], lp["ln2"], cfg.norm_eps)
+        return h, st2
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and not collect_state) else body
+    x, new_states = maybe_scan(body_fn, x, (params["layers"], states), scan=cfg.scan_layers)
+    return x, new_states
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    n_groups = cfg.n_layers // cfg.attn_every
+    remainder = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, remainder
+
+
+def _tree_slice_reshape(tree, n_groups, per_group):
+    head = jax.tree.map(lambda a: a[: n_groups * per_group].reshape(n_groups, per_group, *a.shape[1:]), tree)
+    tail = jax.tree.map(lambda a: a[n_groups * per_group :], tree)
+    return head, tail
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig, states=None, collect=False):
+    """Zamba2: groups of `attn_every` mamba layers, shared attn between groups."""
+    n_groups, rem = _hybrid_groups(cfg)
+    b = x.shape[0]
+    if states is None:
+        st0 = ssm_lib.init_ssm_state(b, cfg)
+        states = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st0)
+    grouped, tail = _tree_slice_reshape(params["mamba_layers"], n_groups, cfg.attn_every)
+    st_grouped, st_tail = _tree_slice_reshape(states, n_groups, cfg.attn_every)
+    acfg = cfg.replace(family="dense")
+
+    def mamba_body(h, xs):
+        lp, st = xs
+        y, st2 = ssm_lib.ssm_forward(lp["ssm"], L.rmsnorm(lp["norm"], h, cfg.norm_eps), cfg, st)
+        return h + y, st2
+
+    def group_body(h, xs):
+        glp, gst = xs
+        h, gst2 = maybe_scan(mamba_body, h, (glp, gst), scan=cfg.scan_layers)
+        if collect:
+            h, kv = _dense_block(params["shared_attn"], h, acfg, jnp.int32(0), return_kv=True)
+            return h, (gst2, kv)
+        h = _dense_block(params["shared_attn"], h, acfg, jnp.int32(0))
+        return h, gst2
+
+    gb = jax.checkpoint(group_body) if (cfg.remat and not collect) else group_body
+    if n_groups > 0:
+        x, ys = maybe_scan(gb, x, (grouped, st_grouped), scan=cfg.scan_layers)
+        if collect:
+            new_gst, kvs = ys
+        else:
+            new_gst, kvs = ys, None
+        new_gst = jax.tree.map(lambda a: a.reshape(n_groups * cfg.attn_every, *a.shape[2:]), new_gst)
+    else:
+        new_gst, kvs = jax.tree.map(lambda a: a[:0], states), None
+    if rem > 0:
+        x, new_tail = maybe_scan(mamba_body, x, (tail, st_tail), scan=cfg.scan_layers)
+    else:
+        new_tail = st_tail
+    new_states = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2], axis=0), new_gst, new_tail)
+    return x, new_states, kvs
+
+
+def _audio_encode(params, frames, cfg: ModelConfig):
+    def body(h, lp):
+        h2 = L.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        h = h + attn_lib.attention_dense(lp["attn"], h2, cfg, causal=False)
+        h2 = L.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], h2), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    mem, _ = maybe_scan(body_fn, frames, params["enc_layers"], scan=cfg.scan_layers)
+    return L.rmsnorm(params["enc_norm"], mem, cfg.norm_eps)
+
+
+def _audio_decode_stack(params, x, cross_kv, cfg: ModelConfig, collect_kv=False):
+    """cross_kv: (k, v) each (nL, B, Hkv, S, hd)."""
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h2 = L.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        if collect_kv:
+            a, kv = attn_lib.attention_dense(lp["attn"], h2, cfg, return_kv=True)
+        else:
+            a = attn_lib.attention_dense(lp["attn"], h2, cfg)
+            kv = None
+        h = h + a
+        h2 = L.rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+        h = h + attn_lib.attention_cross(lp["cross_attn"], h2, (ck, cv), cfg)
+        h2 = L.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        h = h + L.mlp(lp["mlp"], h2)
+        return h, kv
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and not collect_kv) else body
+    x, kvs = maybe_scan(body_fn, x, (params["dec_layers"], *cross_kv), scan=cfg.scan_layers)
+    return x, kvs
+
+
+def project_cross_kv(params, mem, cfg: ModelConfig):
+    def per_layer(lp):
+        return attn_lib.project_memory_kv(lp["cross_attn"], mem, cfg)
+
+    return jax.vmap(per_layer, in_axes=(0,))(params["dec_layers"])
+
+
+# ===========================================================================
+# public API: forward / loss
+# ===========================================================================
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence forward -> final hidden states (B, S, d)."""
+    if cfg.family == "audio":
+        mem = _audio_encode(params, batch["src_frames"].astype(jnp.dtype(cfg.dtype)), cfg)
+        x = L.embed(params["embed"], batch["tokens"])
+        cross_kv = project_cross_kv(params, mem, cfg)
+        x, _ = _audio_decode_stack(params, x, cross_kv, cfg)
+    elif cfg.family == "ssm":
+        x = L.embed(params["embed"], batch["tokens"])
+        x, _ = _rwkv_forward(params, x, cfg)
+    elif cfg.family == "hybrid":
+        x = L.embed(params["embed"], batch["tokens"])
+        x, _, _ = _hybrid_forward(params, x, cfg)
+    else:
+        x = L.embed(params["embed"], batch["tokens"])
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        if cfg.family == "vlm" and "prefix_embeds" in batch:
+            x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        x, _ = _scan_layers(params, x, cfg)
+        if cfg.family == "vlm" and "prefix_embeds" in batch:
+            x = x[:, batch["prefix_embeds"].shape[1] :, :]
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def logits_fn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return L.lm_head_tied(params["embed"], x, cfg.logit_softcap)
+    return L.lm_head(params["lm_head"], x, cfg.logit_softcap)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, chunk: int = 1024):
+    """Chunked softmax-xent; never materializes (B, S, V) logits."""
+    x = forward(params, batch, cfg)  # (B, S, d)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    c = min(chunk, s)
+    if s % c != 0:
+        c = s
+    n_chunks = s // c
+
+    def body(acc, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * c, c, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = xs @ (w.T if cfg.tie_embeddings else w)
+        logits = logits.astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = L.softcap(logits, cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    # python loop: few chunks, and keeps HloCostAnalysis exact (scan bodies
+    # are counted once by XLA regardless of trip count)
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        total, _ = body(total, i)
+    loss = total / (b * s)
+    if cfg.family == "moe":
+        # load-balance aux on first-layer router over a token sample
+        aux = moe_lib.aux_load_balance_loss(
+            jax.tree.map(lambda a: a[0], params["layers"])["moe"], x[:, : min(s, 512)], cfg
+        )
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ===========================================================================
+# decode cache: init / specs
+# ===========================================================================
+
+
+def kv_cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.kv_dtype or cfg.dtype)
+
+
+def _windowed_cache_applicable(cfg: ModelConfig) -> bool:
+    return (cfg.windowed_kv_cache and cfg.local_global_pattern
+            and cfg.sliding_window is not None and cfg.n_layers % 2 == 0)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> dict:
+    if _windowed_cache_applicable(cfg):
+        # local (even) layers: W-slot ring; global (odd) layers: full length
+        n_pairs = cfg.n_layers // 2
+        kvd = kv_cache_dtype(cfg)
+        w = min(cfg.sliding_window, max_len)
+        loc = kv_mapping.init_cache(n_pairs, batch, cfg.n_kv_heads, cfg.head_dim, w, kvd)
+        glob = kv_mapping.init_cache(n_pairs, batch, cfg.n_kv_heads, cfg.head_dim, max_len, kvd)
+        return {"k_loc": loc["k"], "v_loc": loc["v"], "k": glob["k"], "v": glob["v"],
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        st = rwkv_lib.init_rwkv_state(batch, cfg)
+        cache = {k: jnp.broadcast_to(v, (cfg.n_layers, *v.shape)).copy() for k, v in st.items()}
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+    if cfg.family == "hybrid":
+        n_groups, _ = _hybrid_groups(cfg)
+        st = ssm_lib.init_ssm_state(batch, cfg)
+        cache = {k: jnp.broadcast_to(v, (cfg.n_layers, *v.shape)).copy() for k, v in st.items()}
+        kv = kv_mapping.init_cache(n_groups, batch, cfg.n_kv_heads, cfg.head_dim, max_len,
+                                   kv_cache_dtype(cfg))
+        cache["k"], cache["v"] = kv["k"], kv["v"]
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+    n_layers = cfg.n_layers
+    kvd = kv_cache_dtype(cfg)
+    cache = kv_mapping.init_cache(n_layers, batch, cfg.n_kv_heads, cfg.head_dim, max_len, kvd)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    cache.pop("layout", None)
+    if cfg.family == "audio":
+        hd = cfg.head_dim
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, src_len, hd), kvd)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, src_len, hd), kvd)
+    return cache
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
+    return jax.eval_shape(lambda: init_decode_cache(cfg, batch, max_len, src_len))
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[jax.Array, dict]:
+    """Process the full prompt; return (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+
+    if cfg.family == "ssm":
+        x = L.embed(params["embed"], tokens)
+        x, states = _rwkv_forward(params, x, cfg, collect_state=True)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        cache = dict(states)
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return logits_fn(params, x[:, -1:, :], cfg), cache
+
+    if cfg.family == "hybrid":
+        x = L.embed(params["embed"], tokens)
+        x, states, kvs = _hybrid_forward(params, x, cfg, collect=True)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        cache = init_decode_cache(cfg, b, max_len)
+        cache.update(states)
+        if kvs is not None:
+            k_new, v_new = kvs  # (G, B, H, S, hd)
+            s = tokens.shape[1]
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], jnp.swapaxes(k_new, -1, -2).astype(cache["k"].dtype), 0, axis=4)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return logits_fn(params, x[:, -1:, :], cfg), cache
+
+    if cfg.family == "audio":
+        mem = _audio_encode(params, batch["src_frames"].astype(jnp.dtype(cfg.dtype)), cfg)
+        cross_k, cross_v = project_cross_kv(params, mem, cfg)
+        x = L.embed(params["embed"], tokens)  # usually a single BOS token
+        x, kvs = _audio_decode_stack(params, x, (cross_k, cross_v), cfg, collect_kv=True)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        cache = init_decode_cache(cfg, b, max_len, src_len=mem.shape[1])
+        k_new, v_new = kvs
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], jnp.swapaxes(k_new, -1, -2).astype(cache["k"].dtype), 0, axis=4)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
+        cache["cross_k"], cache["cross_v"] = cross_k.astype(cache["cross_k"].dtype), cross_v.astype(cache["cross_v"].dtype)
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return logits_fn(params, x[:, -1:, :], cfg), cache
+
+    # dense / vlm / moe
+    x = L.embed(params["embed"], tokens)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.family == "vlm" and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    x, kvs = _scan_layers(params, x, cfg, collect_kv=True)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    s_total = x.shape[1]
+    cache = init_decode_cache(cfg, b, max_len)
+    k_new, v_new = kvs  # (nL, B, H, S, hd)
+    if _windowed_cache_applicable(cfg):
+        w = cache["k_loc"].shape[-1]
+        # local (even) layers: last W tokens placed at their ring slots
+        slots = jnp.arange(w)
+        if s_total >= w:
+            t_idx = s_total - w + jnp.mod(slots - (s_total - w), w)
+        else:
+            t_idx = jnp.minimum(slots, s_total - 1)  # surplus slots masked later
+        k_loc = jnp.take(k_new[0::2], t_idx, axis=3)
+        v_loc = jnp.take(v_new[0::2], t_idx, axis=3)
+        cache["k_loc"] = jnp.swapaxes(k_loc, -1, -2).astype(cache["k_loc"].dtype)
+        cache["v_loc"] = v_loc.astype(cache["v_loc"].dtype)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], jnp.swapaxes(k_new[1::2], -1, -2).astype(cache["k"].dtype), 0, axis=4)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new[1::2].astype(cache["v"].dtype), 0, axis=3)
+        cache["pos"] = jnp.asarray(s_total, jnp.int32)
+        return logits_fn(params, x[:, -1:, :], cfg), cache
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], jnp.swapaxes(k_new, -1, -2).astype(cache["k"].dtype), 0, axis=4)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
+    cache["pos"] = jnp.asarray(s_total, jnp.int32)
+    return logits_fn(params, x[:, -1:, :], cfg), cache
+
+
+# ===========================================================================
+# decode step
+# ===========================================================================
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
+    """One token per sequence: tokens (B, 1) -> (logits (B,1,V), cache')."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens)
+
+    if cfg.family == "ssm":
+        x = L.layernorm(params["ln_in"], x, cfg.norm_eps)
+
+        def body(h, xs):
+            lp, st = xs
+            h, st2 = rwkv_lib.rwkv_block(lp["block"], h, st, cfg, lp["ln1"], lp["ln2"], cfg.norm_eps)
+            return h, st2
+
+        states = {k: cache[k] for k in ("wkv", "att_tail", "ffn_tail")}
+        x, new_states = maybe_scan(body, x, (params["layers"], states), scan=cfg.scan_layers)
+        new_cache = dict(new_states)
+        new_cache["pos"] = pos + tokens.shape[1]
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return logits_fn(params, x, cfg), new_cache
+
+    if cfg.family == "hybrid":
+        return _hybrid_decode_step(params, cache, x, tokens, cfg)
+
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+    flags = _layer_flags(cfg)
+    n_layers = cfg.n_layers
+
+    if cfg.family == "audio":
+        def body(carry, xs):
+            h, kc_all, vc_all = carry
+            lp, ck, cv, idx = xs
+            kc = kc_all[idx]
+            vc = vc_all[idx]
+            h2 = L.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+            a, kc, vc = attn_lib.attention_decode(lp["attn"], h2, kc, vc, pos, cfg)
+            h = h + a
+            h2 = L.rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+            h = h + attn_lib.attention_cross(lp["cross_attn"], h2, (ck, cv), cfg)
+            h2 = L.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+            h = h + L.mlp(lp["mlp"], h2)
+            kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+            vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+            return (h, kc_all, vc_all), None
+
+        (x, k_new, v_new), _ = maybe_scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["dec_layers"], cache["cross_k"], cache["cross_v"], jnp.arange(n_layers)),
+            scan=cfg.scan_layers)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+        new_cache["pos"] = pos + tokens.shape[1]
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return logits_fn(params, x, cfg), new_cache
+
+    if _windowed_cache_applicable(cfg):
+        return _windowed_decode_step(params, cache, x, tokens, cfg)
+
+    # dense / vlm / moe — cache carried through scan, updated in place
+    def body(carry, xs):
+        h, kc_all, vc_all = carry
+        lp, flag, idx = xs
+        kc = kc_all[idx]
+        vc = vc_all[idx]
+        h, kc, vc = _dense_block_decode(lp, h, kc, vc, pos, cfg, flag)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+        return (h, kc_all, vc_all), None
+
+    (x, k_new, v_new), _ = maybe_scan(
+        body, (x, cache["k"], cache["v"]), (params["layers"], flags, jnp.arange(n_layers)),
+        scan=cfg.scan_layers)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + tokens.shape[1]}
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, x, cfg), new_cache
+
+
+def _mlp_tail(lp: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m = moe_lib.moe(lp["moe"], h, cfg, impl=cfg_moe_impl(cfg))
+    else:
+        m = L.mlp(lp["mlp"], h)
+    if cfg.post_block_norm:
+        m = L.rmsnorm(lp["post_mlp_norm"], m, cfg.norm_eps)
+    return x + m
+
+
+def _windowed_decode_step(params, cache, x, tokens, cfg: ModelConfig):
+    """Local/global paired decode: even layers hit the W-slot ring cache,
+    odd layers the full cache. Layer order preserved: (local, global) pairs."""
+    pos = cache["pos"]
+    n_pairs = cfg.n_layers // 2
+    layers_loc = jax.tree.map(lambda a: a[0::2], params["layers"])
+    layers_glob = jax.tree.map(lambda a: a[1::2], params["layers"])
+
+    def body(carry, xs):
+        h, kl_all, vl_all, kg_all, vg_all = carry
+        lp_loc, lp_glob, idx = xs
+        # --- local layer: ring attention
+        h2 = L.rmsnorm(lp_loc["attn_norm"], h, cfg.norm_eps)
+        a, kl, vl = attn_lib.attention_decode_ring(
+            lp_loc["attn"], h2, kl_all[idx], vl_all[idx], pos, cfg)
+        if cfg.post_block_norm:
+            a = L.rmsnorm(lp_loc["post_attn_norm"], a, cfg.norm_eps)
+        h = _mlp_tail(lp_loc, h + a, cfg)
+        kl_all = jax.lax.dynamic_update_index_in_dim(kl_all, kl, idx, 0)
+        vl_all = jax.lax.dynamic_update_index_in_dim(vl_all, vl, idx, 0)
+        # --- global layer: full cache
+        h2 = L.rmsnorm(lp_glob["attn_norm"], h, cfg.norm_eps)
+        a, kg, vg = attn_lib.attention_decode(
+            lp_glob["attn"], h2, kg_all[idx], vg_all[idx], pos, cfg)
+        if cfg.post_block_norm:
+            a = L.rmsnorm(lp_glob["post_attn_norm"], a, cfg.norm_eps)
+        h = _mlp_tail(lp_glob, h + a, cfg)
+        kg_all = jax.lax.dynamic_update_index_in_dim(kg_all, kg, idx, 0)
+        vg_all = jax.lax.dynamic_update_index_in_dim(vg_all, vg, idx, 0)
+        return (h, kl_all, vl_all, kg_all, vg_all), None
+
+    (x, kl, vl, kg, vg), _ = maybe_scan(
+        body, (x, cache["k_loc"], cache["v_loc"], cache["k"], cache["v"]),
+        (layers_loc, layers_glob, jnp.arange(n_pairs)), scan=cfg.scan_layers)
+    new_cache = {"k_loc": kl, "v_loc": vl, "k": kg, "v": vg,
+                 "pos": pos + tokens.shape[1]}
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, x, cfg), new_cache
+
+
+def _hybrid_decode_step(params, cache, x, tokens, cfg: ModelConfig):
+    pos = cache["pos"]
+    n_groups, rem = _hybrid_groups(cfg)
+    acfg = cfg.replace(family="dense")
+    states = {"ssd": cache["ssd"], "conv_x": cache["conv_x"], "conv_bc": cache["conv_bc"]}
+    grouped, tail = _tree_slice_reshape(params["mamba_layers"], n_groups, cfg.attn_every)
+    st_grouped, st_tail = _tree_slice_reshape(states, n_groups, cfg.attn_every)
+
+    def mamba_body(h, xs):
+        lp, st = xs
+        y, st2 = ssm_lib.ssm_decode_step(lp["ssm"], L.rmsnorm(lp["norm"], h, cfg.norm_eps), st, cfg)
+        return h + y, st2
+
+    def group_body(carry, xs):
+        h, kc_all, vc_all = carry
+        glp, gst, idx = xs
+        h, gst2 = maybe_scan(mamba_body, h, (glp, gst), scan=cfg.scan_layers)
+        kc, vc = kc_all[idx], vc_all[idx]
+        h2 = L.rmsnorm(params["shared_attn"]["attn_norm"], h, cfg.norm_eps)
+        a, kc, vc = attn_lib.attention_decode(params["shared_attn"]["attn"], h2, kc, vc, pos, acfg)
+        h = h + a
+        h2 = L.rmsnorm(params["shared_attn"]["mlp_norm"], h, cfg.norm_eps)
+        h = h + L.mlp(params["shared_attn"]["mlp"], h2)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+        return (h, kc_all, vc_all), gst2
+
+    if n_groups > 0:
+        (x, k_new, v_new), new_gst = maybe_scan(
+            group_body, (x, cache["k"], cache["v"]), (grouped, st_grouped, jnp.arange(n_groups)),
+            scan=cfg.scan_layers)
+        new_gst = jax.tree.map(lambda a: a.reshape(n_groups * cfg.attn_every, *a.shape[2:]), new_gst)
+    else:
+        k_new, v_new = cache["k"], cache["v"]
+        new_gst = jax.tree.map(lambda a: a[:0], states)
+    if rem > 0:
+        x, new_tail = maybe_scan(mamba_body, x, (tail, st_tail), scan=cfg.scan_layers)
+    else:
+        new_tail = st_tail
+    new_states = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2], axis=0), new_gst, new_tail)
+    new_cache = {"ssd": new_states["ssd"], "conv_x": new_states["conv_x"],
+                 "conv_bc": new_states["conv_bc"],
+                 "k": k_new, "v": v_new, "pos": pos + tokens.shape[1]}
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, x, cfg), new_cache

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN: top-k router + GShard capacity dispatch.
+
+Two dispatch implementations:
+
+* ``einsum``  — GShard-style grouped capacity dispatch. Tokens are split into
+  groups; within each group a (S_g, E, C) dispatch tensor routes tokens to
+  expert slots. This is the production path: GSPMD shards the group axis over
+  `data` and the expert axis over `model` (expert parallelism), emitting
+  all-to-alls in the dry-run HLO. Over-capacity tokens drop (standard).
+* ``dense``   — exact reference: every expert computes every token, combined
+  with router weights. O(E/k) FLOP overhead; used for correctness tests and
+  tiny smoke configs only.
+
+Decode steps route B tokens (one per sequence) through the same path — the
+grouped expert GEMV is the MoE analogue of the paper's per-Pbank GEMV tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "router": dense_init(kr, (d, e), dtype),
+        "w_gate": dense_init(k1, (e, d, f), dtype),
+        "w_up": dense_init(k2, (e, d, f), dtype),
+        "w_down": dense_init(k3, (e, f, d), dtype),
+    }
+
+
+def _router(p: dict, x2d: jax.Array, cfg: ModelConfig):
+    """x2d (T, d) -> (weights (T, k), idx (T, k), probs (T, E))."""
+    logits = (x2d @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)  # renormalize over selected
+    return w.astype(x2d.dtype), idx, probs
+
+
+def moe_dense(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Exact reference: all experts on all tokens (tests/smoke only)."""
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    w, idx, _ = _router(p, x2d, cfg)
+    # (E, T, f)
+    g = jnp.einsum("td,edf->etf", x2d, p["w_gate"])
+    u = jnp.einsum("td,edf->etf", x2d, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y_e = jnp.einsum("etf,efd->etd", h, p["w_down"])  # (E, T, d)
+    # combine: sum over top-k picks
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=x2d.dtype)  # (T, k, E)
+    comb = jnp.einsum("tk,tke->te", w, onehot)  # (T, E)
+    y = jnp.einsum("te,etd->td", comb, y_e)
+    return y.reshape(shape)
+
+
+def moe_einsum(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """GShard grouped capacity dispatch (production path)."""
+    shape = x.shape
+    d = shape[-1]
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    sg = min(cfg.moe_group_size, t)
+    n_groups = max(t // sg, 1)
+    if t % n_groups != 0:
+        n_groups, sg = 1, t
+    sg = t // n_groups
+    cap = int(max(cfg.top_k, round(sg * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor)))
+    cap = min(cap, sg)
+
+    xg = x2d.reshape(n_groups, sg, d)
+    w, idx, _ = _router(p, x2d, cfg)
+    w = w.reshape(n_groups, sg, cfg.top_k)
+    idx = idx.reshape(n_groups, sg, cfg.top_k)
+
+    # position of each (token, pick) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.int32)  # (G,S,K,E)
+    flat = onehot.reshape(n_groups, sg * cfg.top_k, cfg.n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (G, S*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(n_groups, sg, cfg.top_k)
+    keep = pos < cap
+
+    # dispatch (G, S, E, C) — bf16 one-hot product
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", w, onehot.astype(x.dtype), pos_oh)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (G, E, C, d)
+    g_ = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u_
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye)
+    return y.reshape(shape)
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig, impl: str = "einsum") -> jax.Array:
+    if impl == "dense":
+        return moe_dense(p, x, cfg)
+    return moe_einsum(p, x, cfg)
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (training substrate)."""
+    x2d = x.reshape(-1, x.shape[-1])
+    _, idx, probs = _router(p, x2d, cfg)
+    e = cfg.n_experts
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac_tokens * frac_probs)

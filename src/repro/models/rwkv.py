@@ -1,0 +1,152 @@
+"""RWKV-6 "Finch" block — data-dependent decay linear attention (attention-free).
+
+Implements the full RWKV6 time-mix (data-dependent token-shift lerp via a
+low-rank adapter producing the five r/k/v/w/g mixes, plus the LoRA'd decay
+``w = exp(-exp(w0 + tanh(x A) B))``) and channel-mix. The WKV recurrence is a
+per-head (hd × hd) state:
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Train/prefill run a lax.scan over time; decode is the O(1) step. No KV cache
+exists, so the paper's K-col/V-row mapping is inapplicable (see DESIGN.md
+§Arch-applicability) — the decode GEMVs (r/k/v/w/g/out projections and
+channel-mix) remain the PIM-offload targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, token_shift
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+LORA_MIX = 32
+LORA_W = 64
+
+
+def rwkv_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    hd = 64
+    n_heads = d // hd
+    return d, n_heads, hd
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> dict:
+    d, n_heads, hd = rwkv_dims(cfg)
+    keys = jax.random.split(key, 16)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "mix_base": jnp.zeros((5, d), dtype) + 0.5,
+        "mix_w1": dense_init(keys[0], (d, 5 * LORA_MIX), dtype),
+        "mix_w2": dense_init(keys[1], (5, LORA_MIX, d), dtype, scale=0.1),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_a": dense_init(keys[2], (d, LORA_W), dtype),
+        "w_b": dense_init(keys[3], (LORA_W, d), dtype, scale=0.1),
+        "u": jnp.zeros((n_heads, hd), jnp.float32),
+        "wr": dense_init(keys[4], (d, d), dtype),
+        "wk": dense_init(keys[5], (d, d), dtype),
+        "wv": dense_init(keys[6], (d, d), dtype),
+        "wg": dense_init(keys[7], (d, d), dtype),
+        "wo": dense_init(keys[8], (d, d), dtype),
+        "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        # channel-mix
+        "cm_mix_k": jnp.zeros((d,), dtype) + 0.5,
+        "cm_mix_r": jnp.zeros((d,), dtype) + 0.5,
+        "cm_wk": dense_init(keys[9], (d, cfg.d_ff), dtype),
+        "cm_wv": dense_init(keys[10], (cfg.d_ff, d), dtype),
+        "cm_wr": dense_init(keys[11], (d, d), dtype),
+    }
+    return p
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent lerp producing the five mixed inputs (RWKV6 signature)."""
+    dx = x_prev - x
+    base = x + dx * p["mix_base"][0]  # shared first-stage mix (uses r-mix slot)
+    lora = jnp.tanh(base @ p["mix_w1"]).reshape(*x.shape[:-1], 5, LORA_MIX)
+    adj = jnp.einsum("...fm,fmd->...fd", lora, p["mix_w2"])  # (..., 5, d)
+    mixes = p["mix_base"][None, None] + adj  # broadcast (B,T,5,d)
+    return [x + dx * mixes[..., i, :] for i in range(5)]
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r/k/v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); u: (H,hd) bonus.
+
+    Returns y (B,T,H,hd) and final state (B,H,hd,hd) [key-major: S[i,j]].
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def rwkv_time_mix(p, x, x_prev_tail, s0, cfg: ModelConfig):
+    """x: (B,T,d). x_prev_tail: (B,d) last token of previous segment (or zeros).
+
+    Returns (y, new_tail, new_state).
+    """
+    d, n_heads, hd = rwkv_dims(cfg)
+    b, t, _ = x.shape
+    x_prev = token_shift(x)
+    x_prev = x_prev.at[:, 0, :].set(x_prev_tail.astype(x.dtype))
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(b, t, n_heads, hd)
+    k = (xk @ p["wk"]).reshape(b, t, n_heads, hd)
+    v = (xv @ p["wv"]).reshape(b, t, n_heads, hd)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    w_log = p["w0"] + (jnp.tanh(xw @ p["w_a"]) @ p["w_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, t, n_heads, hd)  # data-dependent decay
+    y, s_fin = _wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(b, t, d)
+    # per-head group norm
+    yh = y.reshape(b, t, n_heads, hd)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, t, d) * p["ln_x"]["scale"].astype(jnp.float32) + p["ln_x"]["bias"].astype(jnp.float32)
+    y = (y * g).astype(x.dtype)
+    return y @ p["wo"], x[:, -1, :], s_fin
+
+
+def rwkv_channel_mix(p, x, x_prev_tail):
+    x_prev = token_shift(x)
+    x_prev = x_prev.at[:, 0, :].set(x_prev_tail.astype(x.dtype))
+    dx = x_prev - x
+    xk = x + dx * p["cm_mix_k"]
+    xr = x + dx * p["cm_mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    kv = k @ p["cm_wv"]
+    return jax.nn.sigmoid((xr @ p["cm_wr"]).astype(jnp.float32)).astype(x.dtype) * kv, x[:, -1, :]
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig) -> dict:
+    d, n_heads, hd = rwkv_dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "att_tail": jnp.zeros((batch, d), dtype),
+        "ffn_tail": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_block(p, x, state, cfg: ModelConfig, ln1, ln2, norm_eps):
+    """Full block: y = x + TM(LN1 x); y = y + CM(LN2 y). Returns (y, state')."""
+    from repro.models.layers import layernorm
+
+    h = layernorm(ln1, x, norm_eps)
+    att, att_tail, wkv = rwkv_time_mix(p, h, state["att_tail"], state["wkv"], cfg)
+    x = x + att
+    h2 = layernorm(ln2, x, norm_eps)
+    ffn, ffn_tail = rwkv_channel_mix(p, h2, state["ffn_tail"])
+    x = x + ffn
+    new_state = {"wkv": wkv, "att_tail": att_tail.astype(state["att_tail"].dtype),
+                 "ffn_tail": ffn_tail.astype(state["ffn_tail"].dtype)}
+    return x, new_state

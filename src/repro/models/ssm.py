@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block — the sequence mixer for zamba2-7b.
+
+Train/prefill use the chunked SSD algorithm (lax.scan over chunks, einsum
+within a chunk) — O(T·P·N) with matmul-friendly inner shapes. Decode is the
+O(1) recurrent state update; its cache is the SSD state (B, H, P, N) plus the
+causal-conv tails. The state update at decode is a pure GEMV-class
+operation, which is why the paper's PIM offload applies to this family's
+projections even though the K/V mapping does not (attention-free).
+
+Projections are kept SEPARATE (w_z / w_x / w_bc / w_dt) rather than one fused
+in_proj: the fused layout interleaves head-sharded and replicated segments,
+which blocks tensor parallelism; with the split, w_z/w_x/conv_x/norm/w_out
+shard cleanly over the `model` axis (heads) while the small B/C/dt paths
+stay replicated. Same math, TP-friendly layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d, d_inner, n_heads
+
+
+def init_ssm(key, cfg: ModelConfig, d_model: int | None = None) -> dict:
+    d, d_inner, n_heads = ssm_dims(cfg, d_model)
+    n = cfg.ssm_state
+    keys = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_z": dense_init(keys[0], (d, d_inner), dtype),
+        "w_x": dense_init(keys[1], (d, d_inner), dtype),
+        "w_bc": dense_init(keys[2], (d, 2 * n), dtype),
+        "w_dt": dense_init(keys[3], (d, n_heads), dtype),
+        "conv_x": dense_init(keys[4], (cfg.ssm_conv_width, d_inner), dtype, scale=1.0),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc": dense_init(keys[5], (cfg.ssm_conv_width, 2 * n), dtype, scale=1.0),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(n_heads), n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "w_out": dense_init(keys[6], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(w, bias, seq: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv over (B, T, C); tail (B, W-1, C) or None."""
+    width = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((seq.shape[0], width - 1, seq.shape[-1]), seq.dtype)
+    else:
+        pad = tail.astype(seq.dtype)
+    xp = jnp.concatenate([pad, seq], axis=1)  # (B, T+W-1, C)
+    out = sum(xp[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(width))
+    out = out + bias
+    new_tail = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(seq.dtype), new_tail
+
+
+def ssd_chunked(xh, a, b, c, chunk: int, s0=None, unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: (B, T, H, P) inputs (already dt-scaled); a: (B, T, H) log-decay per
+    step (<=0); b, c: (B, T, N). Returns y (B, T, H, P), final state
+    (B, H, P, N). ``unroll`` python-unrolls the chunk loop (cost runs).
+    """
+    bb, t, h, pp = xh.shape
+    n = b.shape[-1]
+    q = min(chunk, t)
+    if t % q != 0:
+        q = t
+    nchunks = t // q
+    xh = xh.reshape(bb, nchunks, q, h, pp)
+    a = a.reshape(bb, nchunks, q, h)
+    b_ = b.reshape(bb, nchunks, q, n)
+    c_ = c.reshape(bb, nchunks, q, n)
+    if s0 is None:
+        s0 = jnp.zeros((bb, h, pp, n), jnp.float32)
+
+    def body(s, inp):
+        xc, ac, bc, cc = inp  # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        al = jnp.cumsum(ac, axis=1)  # (B,Q,H) cumulative log decay
+        ldiff = al[:, :, None, :] - al[:, None, :, :]  # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        g = jnp.einsum("bqn,bsn->bqs", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", g, lmat, xc.astype(jnp.float32))
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cc.astype(jnp.float32), s, jnp.exp(al))
+        decay_to_end = jnp.exp(al[:, -1:, :] - al)  # (B,Q,H)
+        s_new = s * jnp.exp(al[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bqh,bqhp,bqn->bhpn", decay_to_end, xc.astype(jnp.float32), bc.astype(jnp.float32)
+        )
+        return s_new, (y_intra + y_inter).astype(xh.dtype)
+
+    xs = (
+        jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(b_, 1, 0),
+        jnp.moveaxis(c_, 1, 0),
+    )
+    if unroll:
+        s_cur, ys_list = s0, []
+        for i in range(nchunks):
+            s_cur, yi = body(s_cur, jax.tree.map(lambda z: z[i], xs))
+            ys_list.append(yi)
+        s_fin, ys = s_cur, jnp.stack(ys_list)
+    else:
+        s_fin, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bb, t, h, pp)
+    return y, s_fin
+
+
+def ssm_forward(
+    p: dict,
+    x: jax.Array,  # (B, T, d)
+    cfg: ModelConfig,
+    state: dict | None = None,  # {"ssd", "conv_x", "conv_bc"}
+    d_model: int | None = None,
+):
+    """Full-sequence (train/prefill) Mamba2 block. Returns (y, new_state)."""
+    d, d_inner, n_heads = ssm_dims(cfg, d_model)
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    z = x @ p["w_z"]
+    xs_raw = x @ p["w_x"]
+    bc_raw = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+    tail_x = state["conv_x"] if state is not None else None
+    tail_bc = state["conv_bc"] if state is not None else None
+    xs, new_tail_x = _causal_conv(p["conv_x"], p["conv_x_b"], xs_raw, tail_x)
+    bc, new_tail_bc = _causal_conv(p["conv_bc"], p["conv_bc_b"], bc_raw, tail_bc)
+    b = bc[..., :n]
+    c = bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt  # log decay (B,T,H)
+    xh = xs.reshape(*xs.shape[:2], n_heads, hd)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+    s0 = state["ssd"] if state is not None else None
+    # unroll the chunk loop only while the HLO stays small (cost runs at
+    # reduced depth); past 32 chunks the scan stays and launch/costrun.py
+    # applies the analytic per-chunk correction instead
+    n_chunks = max(x.shape[1] // cfg.ssm_chunk, 1)
+    y, s_fin = ssd_chunked(xh_dt, a, b, c, cfg.ssm_chunk, s0,
+                           unroll=(not cfg.scan_layers) and n_chunks <= 32)
+    y = y + (p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*xs.shape[:2], d_inner)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = y @ p["w_out"]
+    dt_x = state["conv_x"].dtype if state is not None else new_tail_x.dtype
+    dt_bc = state["conv_bc"].dtype if state is not None else new_tail_bc.dtype
+    new_state = {"ssd": s_fin, "conv_x": new_tail_x.astype(dt_x),
+                 "conv_bc": new_tail_bc.astype(dt_bc)}
+    return out, new_state
+
+
+def ssm_decode_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig, d_model: int | None = None):
+    """Single-token recurrence: h' = exp(aΔ)h + Δ x⊗B ; y = C·h'. x: (B,1,d)."""
+    return ssm_forward(p, x, cfg, state, d_model)
+
+
+def init_ssm_state(batch: int, cfg: ModelConfig, d_model: int | None = None) -> dict:
+    d, d_inner, n_heads = ssm_dims(cfg, d_model)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ssd": jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv_width - 1, 2 * cfg.ssm_state), dtype),
+    }

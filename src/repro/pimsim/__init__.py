@@ -1,0 +1,23 @@
+"""Ramulator2-style CD-PIM performance model (the paper's evaluation layer)."""
+from repro.pimsim.device import DEVICES, IPHONE, JETSON, DeviceSpec  # noqa: F401
+from repro.pimsim.latency import (  # noqa: F401
+    StageBreakdown,
+    gpu_decode_step_time,
+    gpu_only_e2e,
+    gpu_prefill_time,
+    hbcem_e2e,
+    pim_decode_step_time,
+)
+from repro.pimsim.llm import LLAMA_1B, LLAMA_7B, LLAMA_13B, MODELS, LLMSpec  # noqa: F401
+from repro.pimsim.pim import (  # noqa: F401
+    ATTACC,
+    CDPIM,
+    CDPIM_FIXED_MAPPING,
+    CONVENTIONAL,
+    DESIGNS,
+    DH_PIM,
+    FOLD_PIM,
+    PIPE_PIM,
+    PIMDesign,
+)
+from repro.pimsim.scheduler import Trace, blocked_trace, lbim_e2e  # noqa: F401

@@ -1,0 +1,102 @@
+"""Event-driven LBIM scheduler — paper Fig. 4(c).
+
+LBIM timeline for a batch of R requests, all arriving at t=0:
+
+* Processor prefills requests back-to-back (GEMM, reading DRAM through the
+  two processor-side Pbanks via MACT_LDB / MACB_LDT).
+* As soon as request i finishes prefill, its decode joins the PIM queue.
+* While the processor is still prefilling, PIM runs with HALF its Pbanks
+  (lbim rate); once the last prefill retires, the controller switches to
+  PIM_MAC_FM and decode proceeds at the full HBCEM rate.
+* Decode of one sequence is strictly autoregressive — parallelism across the
+  batch only.
+
+The simulator advances step-by-step over the set of decode-ready requests;
+each step's latency reflects the current Pbank split and batch size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.pimsim.device import DeviceSpec
+from repro.pimsim.latency import (
+    StageBreakdown,
+    gpu_prefill_time,
+    pim_decode_step_time,
+)
+from repro.pimsim.llm import LLMSpec
+from repro.pimsim.pim import PIMDesign
+
+
+@dataclass
+class Request:
+    lin: int
+    lout: int
+    generated: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.lout
+
+    @property
+    def context(self) -> int:
+        return self.lin + self.generated
+
+
+@dataclass
+class Trace:
+    """Timeline segments for the Fig.4-style timing diagram benchmark."""
+    events: list = field(default_factory=list)  # (t0, t1, resource, label)
+
+    def add(self, t0, t1, resource, label):
+        self.events.append((round(t0, 6), round(t1, 6), resource, label))
+
+
+def lbim_e2e(model: LLMSpec, lin: int, lout: int, dev: DeviceSpec, design: PIMDesign,
+             batch: int = 1, trace: Trace | None = None) -> StageBreakdown:
+    reqs = [Request(lin, lout) for _ in range(batch)]
+    p1 = gpu_prefill_time(model, lin, dev)
+    prefill_done = [p1 * (i + 1) for i in range(batch)]
+    all_prefill_done = prefill_done[-1]
+    if trace is not None:
+        for i, t in enumerate(prefill_done):
+            trace.add(t - p1, t, "processor", f"prefill r{i}")
+
+    t = prefill_done[0]  # first decode can start here
+    decode_busy = 0.0
+    while not all(r.done for r in reqs):
+        ready = [r for i, r in enumerate(reqs) if not r.done and
+                 prefill_done[i] <= t + 1e-12]
+        if not ready:
+            # PIM idle until the next prefill retires
+            t = min(pd for r, pd in zip(reqs, prefill_done) if not r.done)
+            continue
+        lbim_phase = t < all_prefill_done - 1e-12
+        ctx = max(r.context for r in ready)
+        step = pim_decode_step_time(model, ctx, dev, design,
+                                    batch=len(ready), lbim=lbim_phase)
+        if trace is not None:
+            trace.add(t, t + step, "pim",
+                      f"decode x{len(ready)} ({'½' if lbim_phase else 'full'})")
+        t += step
+        decode_busy += step
+        for r in ready:
+            r.generated += 1
+
+    total = t
+    return StageBreakdown(prefill_s=all_prefill_done, decode_s=total - all_prefill_done)
+
+
+def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:
+    """HBCEM (blocked) timeline for the Fig.4 diagram."""
+    tr = Trace()
+    p1 = gpu_prefill_time(model, lin, dev)
+    t = 0.0
+    for i in range(batch):
+        tr.add(t, t + p1, "processor", f"prefill r{i}")
+        t += p1
+    for step_idx in range(lout):
+        s = pim_decode_step_time(model, lin + step_idx, dev, design, batch=batch)
+        tr.add(t, t + s, "pim", f"decode x{batch}")
+        t += s
+    return tr

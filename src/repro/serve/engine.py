@@ -1,0 +1,179 @@
+"""Inference engine: wave-based continuous batching with BLOCKED/HBCEM/LBIM.
+
+Requests are served in *waves* of ``slots`` sequences. In BLOCKED and HBCEM
+the engine fully prefills a wave, decodes it to completion, then admits the
+next wave (the paper's blocked execution — HBCEM differs from BLOCKED only
+in where decode runs, which the timing model accounts; tokens are identical).
+In LBIM, while wave *i* decodes, wave *i+1*'s prompt is prefilled chunk by
+chunk inside the SAME fused XLA step (``core.interleave.fused_step``) — the
+MACT_LDB/MACB_LDT overlap. All modes produce identical tokens; the modes
+differ in schedule, which ``schedule_report()`` exposes for the timing model.
+
+Constraint (documented): within a wave, prompts must share one length for
+state-carrying families (ssm/hybrid — right-padding would corrupt the
+recurrent state); attention families accept ragged prompts via per-sequence
+cache positions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import interleave
+from repro.core.pim_modes import Mode, StepPlan, plan_step
+from repro.models import model as M
+from repro.serve import sampling
+
+
+@dataclass
+class ScheduleEvent:
+    plan: StepPlan
+    decode_batch: int
+    prefill_tokens: int
+
+
+@dataclass
+class Engine:
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 256
+    slots: int = 4
+    mode: Mode = Mode.HBCEM
+    chunk: int = 8
+    events: list = field(default_factory=list)
+
+    def _prefill_wave(self, prompts: list[list[int]]):
+        lens = [len(p) for p in prompts]
+        maxlen = max(lens)
+        if self.cfg.family in ("ssm", "hybrid") and len(set(lens)) > 1:
+            raise ValueError("state-carrying families need equal prompt lengths per wave")
+        toks = np.zeros((len(prompts), maxlen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = M.prefill(self.params, batch, self.cfg, self.max_len)
+        cache["pos"] = jnp.asarray(lens, jnp.int32)
+        # last-token logits per sequence (ragged): re-read via one decode of
+        # the true last token is avoided by gathering during prefill; for
+        # simplicity logits correspond to the longest row — recompute ragged:
+        if len(set(lens)) > 1:
+            logits = self._ragged_last_logits(batch["tokens"], lens)
+        return logits, cache
+
+    def _ragged_last_logits(self, tokens, lens):
+        x = M.forward(self.params, {"tokens": tokens}, self.cfg)
+        idx = jnp.asarray([l - 1 for l in lens])
+        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
+        return M.logits_fn(self.params, last, self.cfg)
+
+    def _chunked_prefill_state(self, prompts: list[list[int]]):
+        """Initialize an empty cache + chunk iterator for LBIM prefill."""
+        lens = [len(p) for p in prompts]
+        if len(set(lens)) > 1:
+            raise ValueError("LBIM wave prompts must share one length")
+        n = lens[0]
+        pad = (-n) % self.chunk
+        if pad and self.cfg.family in ("ssm", "hybrid"):
+            raise ValueError("state-carrying families need chunk-aligned prompts in LBIM")
+        toks = np.zeros((len(prompts), n + pad), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        cache = M.init_decode_cache(self.cfg, len(prompts), self.max_len)
+        cache["pos"] = jnp.zeros((len(prompts),), jnp.int32)
+        return jnp.asarray(toks), cache, n
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16) -> list[list[int]]:
+        self.events.clear()
+        waves = [prompts[i : i + self.slots] for i in range(0, len(prompts), self.slots)]
+        if self.mode is Mode.LBIM and len(waves) > 1:
+            return self._generate_lbim(waves, max_new)
+        out: list[list[int]] = []
+        for wave in waves:
+            logits, cache = self._prefill_wave(wave)
+            self.events.append(ScheduleEvent(plan_step(self.mode, False, True, self.chunk),
+                                             0, sum(len(p) for p in wave)))
+            out.extend(self._decode_wave(logits, cache, len(wave), max_new))
+        return out
+
+    def _decode_wave(self, logits, cache, nseq, max_new):
+        gen = [[] for _ in range(nseq)]
+        tok = sampling.greedy(logits)
+        for i in range(nseq):
+            gen[i].append(int(tok[i]))
+        for _ in range(max_new - 1):
+            logits, cache = interleave.decode_only_step(
+                self.params, cache, tok[:, None], self.cfg)
+            self.events.append(ScheduleEvent(plan_step(self.mode, True, False, 0), nseq, 0))
+            tok = sampling.greedy(logits)
+            for i in range(nseq):
+                gen[i].append(int(tok[i]))
+        return gen
+
+    def _generate_lbim(self, waves, max_new):
+        out = []
+        logits, cache = self._prefill_wave(waves[0])  # cold start
+        self.events.append(ScheduleEvent(plan_step(self.mode, False, True, self.chunk),
+                                         0, sum(len(p) for p in waves[0])))
+        for widx in range(len(waves)):
+            nseq = len(waves[widx])
+            nxt = waves[widx + 1] if widx + 1 < len(waves) else None
+            if nxt is not None:
+                ntoks, ncache, nlen = self._chunked_prefill_state(nxt)
+                nchunks = ntoks.shape[1] // self.chunk
+                ci = 0
+            gen = [[] for _ in range(nseq)]
+            tok = sampling.greedy(logits)
+            for i in range(nseq):
+                gen[i].append(int(tok[i]))
+            nlogits = None
+            for _ in range(max_new - 1):
+                if nxt is not None and ci < nchunks:
+                    chunk_toks = ntoks[:, ci * self.chunk : (ci + 1) * self.chunk]
+                    logits, cache, nlogits, ncache = interleave.fused_step(
+                        self.params, cache, tok[:, None], ncache, chunk_toks, self.cfg)
+                    ci += 1
+                    self.events.append(ScheduleEvent(
+                        plan_step(self.mode, True, True, self.chunk),
+                        nseq, chunk_toks.shape[0] * self.chunk))
+                else:
+                    logits, cache = interleave.decode_only_step(
+                        self.params, cache, tok[:, None], self.cfg)
+                    self.events.append(ScheduleEvent(plan_step(self.mode, True, False, 0),
+                                                     nseq, 0))
+                tok = sampling.greedy(logits)
+                for i in range(nseq):
+                    gen[i].append(int(tok[i]))
+            # finish any unprefetched chunks, then hand over to next wave
+            if nxt is not None:
+                while ci < nchunks:
+                    chunk_toks = ntoks[:, ci * self.chunk : (ci + 1) * self.chunk]
+                    nlogits, ncache = interleave.prefill_chunk_step(
+                        self.params, ncache, chunk_toks, self.cfg)
+                    ci += 1
+                    self.events.append(ScheduleEvent(plan_step(self.mode, False, True,
+                                                               self.chunk),
+                                                     0, chunk_toks.shape[0] * self.chunk))
+                ncache["pos"] = jnp.full((len(nxt),), len(nxt[0]), jnp.int32)
+                logits, cache = self._fix_handoff_logits(nlogits, ncache, nxt)
+            out.extend(gen)
+        return out
+
+    def _fix_handoff_logits(self, nlogits, ncache, nxt):
+        """Logits of the true last prompt token (pad-corrected)."""
+        nlen = len(nxt[0])
+        off = nlen % self.chunk
+        if off == 0:
+            logits = nlogits[:, -1:, :]
+        else:
+            logits = nlogits[:, off - 1 : off, :]
+        return logits, ncache
+
+    def schedule_report(self):
+        fused = sum(1 for e in self.events if e.plan.fused)
+        total = len(self.events)
+        return {"steps": total, "fused_steps": fused,
+                "modes": {e.plan.label for e in self.events}}

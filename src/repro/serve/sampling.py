@@ -1,0 +1,23 @@
+"""Token sampling: greedy / temperature / top-k (functional, rng-explicit)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits (B, 1, V) → (B,) int32."""
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    lg = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return greedy(logits)
+    lg = lg / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        cutoff = vals[:, -1:]
+        lg = jnp.where(lg >= cutoff, lg, -1e30)
+    return jax.random.categorical(rng, lg, axis=-1).astype(jnp.int32)

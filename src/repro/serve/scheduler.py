@@ -1,0 +1,55 @@
+"""Request-level scheduler: admission queue in front of the Engine.
+
+Maps incoming requests to engine waves by mode policy (the paper's workload
+framing: memory-intensive = short-in/long-out favors HBCEM; compute-
+intensive = long-in/short-out favors LBIM). ``auto`` picks LBIM when the
+queue's aggregate prefill work dominates its decode work — the same
+TTFT-vs-decode trade the paper's Fig. 6/7 sweep demonstrates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.pim_modes import Mode
+from repro.serve.engine import Engine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+
+
+@dataclass
+class Scheduler:
+    engine: Engine
+    mode_policy: str = "auto"  # "auto" | "hbcem" | "lbim" | "blocked"
+    queue: list = field(default_factory=list)
+    _next_id: int = 0
+
+    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, prompt, max_new))
+        return rid
+
+    def _pick_mode(self) -> Mode:
+        if self.mode_policy != "auto":
+            return Mode(self.mode_policy)
+        prefill_work = sum(len(r.prompt) for r in self.queue)
+        decode_work = sum(r.max_new for r in self.queue)
+        # compute-intensive queue (TTFT-dominated) -> overlap with LBIM
+        return Mode.LBIM if prefill_work >= decode_work else Mode.HBCEM
+
+    def drain(self) -> dict[int, list[int]]:
+        """Serve the whole queue; returns {rid: generated tokens}."""
+        if not self.queue:
+            return {}
+        mode = self._pick_mode()
+        self.engine.mode = mode
+        batch = list(self.queue)
+        self.queue.clear()
+        max_new = max(r.max_new for r in batch)
+        outs = self.engine.generate([r.prompt for r in batch], max_new=max_new)
+        return {r.rid: out[: r.max_new] for r, out in zip(batch, outs)}

@@ -1,0 +1,55 @@
+"""The jitted train step: loss → grads → clip → AdamW, with grad accumulation.
+
+This is the function the multi-pod dry-run lowers for every train_4k cell:
+its HLO contains the forward, backward, optimizer update, and (under pjit)
+the gradient all-reduce across (pod, data) — the collectives the roofline
+analysis measures.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update
+
+
+def loss_for_batch(params, batch, cfg: ModelConfig):
+    return M.loss_fn(params, batch, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt_cfg", "accum"))
+def train_step(params, opt_state: OptState, batch, cfg: ModelConfig,
+               opt_cfg: AdamWConfig, accum: int = 1):
+    """batch: {tokens, labels, [prefix_embeds|src_frames]} (local shard).
+
+    ``accum`` > 1 splits the batch into microbatches scanned sequentially —
+    the standard memory/throughput trade (and the lever the perf loop uses
+    to move the memory roofline term).
+    """
+    if accum == 1:
+        loss, grads = jax.value_and_grad(loss_for_batch)(params, batch, cfg)
+    else:
+        def micro(i):
+            mb = jax.tree.map(
+                lambda a: a.reshape(accum, a.shape[0] // accum, *a.shape[1:])[i], batch)
+            return jax.value_and_grad(loss_for_batch)(params, mb, cfg)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            li, gi = micro(i)
+            return (loss_acc + li,
+                    jax.tree.map(lambda a, b: a + b.astype(a.dtype), grad_acc, gi)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros),
+                                        jnp.arange(accum))
+        loss = loss / accum
+        grads = jax.tree.map(lambda g: g / accum, grads)
+
+    new_params, new_opt, stats = adamw_update(params, grads, opt_state, opt_cfg)
+    metrics = {"loss": loss, **stats}
+    return new_params, new_opt, metrics

@@ -1,0 +1,55 @@
+"""Gradient-compression collectives + request scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.collectives import dequantize_grad, quantize_grad
+from repro.serve.scheduler import Scheduler
+from repro.serve.engine import Engine
+from repro.core.pim_modes import Mode
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def test_grad_quantization_roundtrip():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.01
+    q, s = quantize_grad(g)
+    deq = dequantize_grad(q, s)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.01  # int8 with per-tensor scale on gaussian grads
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Accumulated error-feedback quantization converges to the true sum."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64, 64)) * 1e-3, jnp.float32)
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(20):
+        corrected = g + err
+        q, s = quantize_grad(corrected)
+        deq = dequantize_grad(q, s)
+        err = corrected - deq
+        total = total + deq
+    rel = float(jnp.linalg.norm(total / 20 - g) / jnp.linalg.norm(g))
+    assert rel < 0.01
+
+
+def test_scheduler_auto_mode_policy():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=64, slots=4, chunk=4)
+    sched = Scheduler(eng)
+    # compute-intensive queue: long prompts, short outputs -> LBIM
+    for _ in range(4):
+        sched.submit([1] * 12, max_new=2)
+    assert sched._pick_mode() is Mode.LBIM
+    out = sched.drain()
+    assert len(out) == 4 and all(len(v) == 2 for v in out.values())
+    # memory-intensive queue: short prompts, long outputs -> HBCEM
+    for _ in range(4):
+        sched.submit([1, 2], max_new=12)
+    assert sched._pick_mode() is Mode.HBCEM
+    out = sched.drain()
+    assert len(out) == 4 and all(len(v) == 12 for v in out.values())

@@ -1,0 +1,162 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+all against the pure-jnp oracles, in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.pim_gemv.ops import linear_w8a8, pim_gemv_int8
+from repro.kernels.pim_gemv.ref import pim_gemv_ref, quantize_ref
+from repro.kernels.ssd_scan.ops import ssd_scan_op
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------
+# pim_gemv
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,b,bn,bk", [
+    (512, 1024, 1, 256, 512),
+    (256, 512, 4, 128, 128),
+    (384, 768, 2, 256, 512),   # padding path (384 % 256 != 0)
+    (100, 130, 3, 256, 512),   # heavy padding
+    (128, 128, 8, 128, 128),
+])
+def test_pim_gemv_matches_oracle(n, k, b, bn, bk):
+    w = jnp.asarray(RNG.integers(-127, 128, (n, k)), jnp.int8)
+    x = jnp.asarray(RNG.integers(-127, 128, (b, k)), jnp.int8)
+    ws = jnp.asarray(RNG.random(n) + 0.5, jnp.float32) * 0.01
+    xs = jnp.asarray(RNG.random(b) + 0.5, jnp.float32) * 0.1
+    out = pim_gemv_int8(w, x, ws, xs, block_n=bn, block_k=bk, interpret=True)
+    ref = pim_gemv_ref(w, x, ws, xs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 160), k=st.integers(8, 160), b=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_pim_gemv_property(n, k, b, seed):
+    """Property: kernel == int32-exact oracle for ANY shape (via padding)."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.integers(-127, 128, (n, k)), jnp.int8)
+    x = jnp.asarray(r.integers(-127, 128, (b, k)), jnp.int8)
+    ws = jnp.ones((n,), jnp.float32)
+    xs = jnp.ones((b,), jnp.float32)
+    out = pim_gemv_int8(w, x, ws, xs, block_n=64, block_k=64, interpret=True)
+    ref = pim_gemv_ref(w, x, ws, xs)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))  # int8 math is exact
+
+
+def test_w8a8_linear_accuracy():
+    """Paper §III: 8-bit weights+activations with no noticeable degradation."""
+    w = jnp.asarray(RNG.standard_normal((256, 512)), jnp.float32) * 0.02
+    x = jnp.asarray(RNG.standard_normal((4, 256)), jnp.float32)
+    y = linear_w8a8(w.T, x, use_kernel=False)  # w passed weight-stationary (N, K)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, f"W8A8 relative error {rel} too high"
+
+
+def test_quantize_roundtrip_monotonic():
+    a = jnp.linspace(-3, 3, 256)[None, :]
+    q, s = quantize_ref(a, axis=1)
+    deq = q.astype(jnp.float32) * s[:, None]
+    assert float(jnp.max(jnp.abs(deq - a))) < float(s[0]) * 0.51 + 1e-6
+
+
+# --------------------------------------------------------------------------
+# decode_attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,hd,lmax,pos,bl,cap", [
+    (2, 8, 2, 64, 1024, 700, 256, None),
+    (1, 4, 4, 128, 512, 512, 128, 50.0),
+    (3, 6, 3, 64, 300, 123, 128, None),   # pad path
+    (2, 8, 8, 64, 2048, 1, 512, None),    # single valid position
+])
+def test_decode_attention_matches_oracle(b, hq, hkv, hd, lmax, pos, bl, cap):
+    r = np.random.default_rng(1)
+    q = jnp.asarray(r.standard_normal((b, hq, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, hkv, hd, lmax)), jnp.float32) * 0.3
+    v = jnp.asarray(r.standard_normal((b, hkv, lmax, hd)), jnp.float32) * 0.3
+    scale = hd ** -0.5
+    out = decode_attention_op(q, k, v, pos, scale=scale, softcap=cap,
+                              block_l=bl, interpret=True)
+    g = hq // hkv
+    ref = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, pos, scale, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.reshape(b, hq, hd)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hkv=st.integers(1, 4), g=st.integers(1, 4), hd=st.sampled_from([32, 64]),
+       lmax=st.sampled_from([128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_decode_attention_property(hkv, g, hd, lmax, seed):
+    """Property: online-softmax tiling == monolithic softmax, any pos."""
+    r = np.random.default_rng(seed)
+    pos = int(r.integers(1, lmax + 1))
+    b = 2
+    q = jnp.asarray(r.standard_normal((b, hkv * g, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, hkv, hd, lmax)), jnp.float32) * 0.3
+    v = jnp.asarray(r.standard_normal((b, hkv, lmax, hd)), jnp.float32) * 0.3
+    out = decode_attention_op(q, k, v, pos, scale=hd ** -0.5, block_l=64, interpret=True)
+    ref = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, pos, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.reshape(b, hkv * g, hd)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_ignores_cache_beyond_pos():
+    """Garbage beyond pos must not affect the output (mask invariant)."""
+    r = np.random.default_rng(2)
+    b, hq, hkv, hd, lmax, pos = 1, 4, 2, 64, 512, 200
+    q = jnp.asarray(r.standard_normal((b, hq, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, hkv, hd, lmax)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((b, hkv, lmax, hd)), jnp.float32)
+    out1 = decode_attention_op(q, k, v, pos, scale=0.125, block_l=128, interpret=True)
+    k2 = k.at[..., pos:].set(1e4)
+    v2 = v.at[:, :, pos:, :].set(-1e4)
+    out2 = decode_attention_op(q, k2, v2, pos, scale=0.125, block_l=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# ssd_scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,p,n,q", [
+    (2, 64, 3, 16, 8, 16),
+    (1, 100, 2, 32, 16, 32),   # pad path
+    (2, 32, 1, 64, 64, 32),
+])
+def test_ssd_scan_matches_sequential(b, t, h, p, n, q):
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.standard_normal((b, t, h, p)), jnp.float32) * 0.5
+    a = -jnp.abs(jnp.asarray(r.standard_normal((b, t, h)), jnp.float32)) * 0.3
+    bm = jnp.asarray(r.standard_normal((b, t, n)), jnp.float32) * 0.5
+    cm = jnp.asarray(r.standard_normal((b, t, n)), jnp.float32) * 0.5
+    s0 = jnp.asarray(r.standard_normal((b, h, p, n)), jnp.float32) * 0.1
+    y, sf = ssd_scan_op(x, a, bm, cm, s0, chunk=q, interpret=True)
+    yr, sr = ssd_scan_ref(x, a, bm, cm, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([16, 48, 64]), chunk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_ssd_chunk_invariance(t, chunk, seed):
+    """Property: result independent of chunk size (associativity of SSD)."""
+    r = np.random.default_rng(seed)
+    b, h, p, n = 1, 2, 8, 4
+    x = jnp.asarray(r.standard_normal((b, t, h, p)), jnp.float32) * 0.5
+    a = -jnp.abs(jnp.asarray(r.standard_normal((b, t, h)), jnp.float32)) * 0.3
+    bm = jnp.asarray(r.standard_normal((b, t, n)), jnp.float32) * 0.5
+    cm = jnp.asarray(r.standard_normal((b, t, n)), jnp.float32) * 0.5
+    y1, s1 = ssd_scan_op(x, a, bm, cm, chunk=chunk, interpret=True)
+    y2, s2 = ssd_scan_ref(x, a, bm, cm, jnp.zeros((b, h, p, n)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,140 @@
+"""Validate the performance model against the paper's reported numbers.
+
+Fitted anchors (tight) vs held-out validations (looser) per
+repro/pimsim/calibrate.py. If calibration constants drift, these fail.
+"""
+import statistics
+
+import pytest
+
+from repro.pimsim import (ATTACC, CDPIM, CDPIM_FIXED_MAPPING, CONVENTIONAL,
+                          DH_PIM, FOLD_PIM, IPHONE, JETSON, LLAMA_1B,
+                          LLAMA_7B, LLAMA_13B, MODELS, PIPE_PIM, gpu_only_e2e,
+                          hbcem_e2e, lbim_e2e)
+
+COMBOS = [(128, 128), (128, 2048), (2048, 128), (2048, 2048)]
+
+
+def close(ours, paper, tol):
+    assert abs(ours / paper - 1) < tol, f"{ours:.3f} vs paper {paper} (tol {tol})"
+
+
+# ---- anchors (fitted; must stay within 10%) -------------------------------
+
+def test_anchor_gpu_e2e_35_7s():
+    close(gpu_only_e2e(LLAMA_1B, 128, 2048, JETSON).total, 35.7, 0.10)
+
+
+def test_anchor_pim_e2e_3_53s():
+    close(hbcem_e2e(LLAMA_1B, 128, 2048, JETSON, CDPIM).total, 3.53, 0.10)
+
+
+def test_anchor_decode_reduction_90_2pct():
+    g = gpu_only_e2e(LLAMA_1B, 128, 2048, JETSON)
+    h = hbcem_e2e(LLAMA_1B, 128, 2048, JETSON, CDPIM)
+    close(1 - h.decode_s / g.decode_s, 0.902, 0.03)
+
+
+def test_anchor_jetson_speedup_10_1x():
+    g = gpu_only_e2e(LLAMA_1B, 128, 2048, JETSON).total
+    h = hbcem_e2e(LLAMA_1B, 128, 2048, JETSON, CDPIM).total
+    close(g / h, 10.1, 0.10)
+
+
+def test_anchor_iphone_speedup_18_6x():
+    g = gpu_only_e2e(LLAMA_1B, 128, 2048, IPHONE).total
+    h = hbcem_e2e(LLAMA_1B, 128, 2048, IPHONE, CDPIM).total
+    close(g / h, 18.6, 0.05)
+
+
+# ---- held-out validations --------------------------------------------------
+
+def test_average_speedup_vs_gpu_11_42x():
+    sps = [gpu_only_e2e(m, li, lo, d).total / hbcem_e2e(m, li, lo, d, CDPIM).total
+           for d in (JETSON, IPHONE) for m in MODELS.values() for li, lo in COMBOS]
+    close(statistics.mean(sps), 11.42, 0.15)
+
+
+def test_average_speedup_vs_attacc_4_25x():
+    sps = [hbcem_e2e(m, li, lo, d, ATTACC).total / hbcem_e2e(m, li, lo, d, CDPIM).total
+           for d in (JETSON, IPHONE) for m in MODELS.values() for li, lo in COMBOS]
+    close(statistics.mean(sps), 4.25, 0.15)
+
+
+@pytest.mark.parametrize("model,paper_max", [
+    (LLAMA_1B, 10.51), (LLAMA_7B, 13.74), (LLAMA_13B, 14.6)])
+def test_jetson_hbcem_maxima(model, paper_max):
+    sps = [gpu_only_e2e(model, li, lo, JETSON).total
+           / hbcem_e2e(model, li, lo, JETSON, CDPIM).total for li, lo in COMBOS]
+    close(max(sps), paper_max, 0.15)
+
+
+def test_lbim_average_1_12x():
+    sps = [hbcem_e2e(m, 2048, lo, d, CDPIM, batch=4).total
+           / lbim_e2e(m, 2048, lo, d, CDPIM, batch=4).total
+           for d in (JETSON, IPHONE) for m in MODELS.values()
+           for lo in (2, 8, 32, 128)]
+    close(statistics.mean(sps), 1.12, 0.10)
+
+
+def test_lbim_never_slower_than_hbcem():
+    for d in (JETSON, IPHONE):
+        for m in MODELS.values():
+            for lo in (2, 8, 32, 128):
+                hb = hbcem_e2e(m, 2048, lo, d, CDPIM, batch=4).total
+                lb = lbim_e2e(m, 2048, lo, d, CDPIM, batch=4).total
+                assert hb / lb >= 0.999, (d.name, m.name, lo)
+
+
+def test_lbim_iphone_below_jetson():
+    """Paper: iPhone gains smaller than Jetson for LLaMA-1B (1.23 vs 1.41)."""
+    j = [hbcem_e2e(LLAMA_1B, 2048, lo, JETSON, CDPIM, batch=4).total
+         / lbim_e2e(LLAMA_1B, 2048, lo, JETSON, CDPIM, batch=4).total
+         for lo in (32, 128)]
+    i = [hbcem_e2e(LLAMA_1B, 2048, lo, IPHONE, CDPIM, batch=4).total
+         / lbim_e2e(LLAMA_1B, 2048, lo, IPHONE, CDPIM, batch=4).total
+         for lo in (32, 128)]
+    assert max(i) < max(j)
+
+
+# ---- design-space structure ------------------------------------------------
+
+def test_cdpim_bandwidth_hierarchy():
+    """CD-PIM 4x conventional; FOLD/Pipe/DH 2x; AttAcc below conventional."""
+    base = CONVENTIONAL.gemv_bytes_per_s(JETSON)
+    assert abs(CDPIM.gemv_bytes_per_s(JETSON) / base - 4.0) < 1e-6
+    for d in (FOLD_PIM, PIPE_PIM, DH_PIM):
+        assert abs(d.gemv_bytes_per_s(JETSON) / base - 2.0) < 1e-6
+    assert ATTACC.gemv_bytes_per_s(JETSON) < base
+
+
+def test_internal_bandwidth_exceeds_external():
+    """PIM's whole premise: internal >> external bandwidth."""
+    assert CDPIM.gemv_bytes_per_s(JETSON) > 10 * JETSON.ext_bw
+
+
+def test_kv_cross_mapping_helps():
+    """§III-C: fixed mapping degrades attention GEMVs by the Pbank factor."""
+    for m in MODELS.values():
+        cross = hbcem_e2e(m, 128, 2048, JETSON, CDPIM).total
+        fixed = hbcem_e2e(m, 128, 2048, JETSON, CDPIM_FIXED_MAPPING).total
+        assert fixed > cross
+    assert CDPIM_FIXED_MAPPING.attn_gemv_bytes_per_s(JETSON) * 4 == \
+        pytest.approx(CDPIM.attn_gemv_bytes_per_s(JETSON))
+
+
+def test_pim_favors_low_batch():
+    """PIM speedup shrinks as batch grows (no weight reuse across GEMVs)."""
+    s1 = gpu_only_e2e(LLAMA_1B, 128, 256, JETSON, batch=1).total / \
+        hbcem_e2e(LLAMA_1B, 128, 256, JETSON, CDPIM, batch=1).total
+    s16 = gpu_only_e2e(LLAMA_1B, 128, 256, JETSON, batch=16).total / \
+        hbcem_e2e(LLAMA_1B, 128, 256, JETSON, CDPIM, batch=16).total
+    assert s16 < s1
+
+
+def test_overhead_matches_paper():
+    from repro.pimsim.overhead import cu_overhead
+    rep = cu_overhead()
+    assert rep.pu_area_um2 == 14941.0
+    assert rep.total_power_mw == pytest.approx(144.0)
+    assert 0.005 < rep.die_area_fraction < 0.012  # ~0.8%

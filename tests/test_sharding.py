@@ -1,0 +1,75 @@
+"""Sharding rules: divisibility of model-axis shards, mesh purity, specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.dist import sharding as sh
+from repro.models import model as M
+
+
+def test_mesh_module_is_pure():
+    """Importing launch.mesh must not initialize jax devices."""
+    import importlib
+    import repro.launch.mesh as mesh_mod
+    importlib.reload(mesh_mod)  # would blow up if module-level device state
+
+
+def test_param_pspec_rules():
+    leaf2 = jax.ShapeDtypeStruct((4096, 14336), jnp.bfloat16)
+    leaf3 = jax.ShapeDtypeStruct((32, 4096, 14336), jnp.bfloat16)
+    assert sh.param_pspec("layers/mlp/w_gate", leaf3) == P(None, None, "model")
+    assert sh.param_pspec("layers/mlp/w_down", leaf3) == P(None, "model", None)
+    assert sh.param_pspec("embed/w", leaf2) == P("model", None)
+    assert sh.param_pspec("lm_head/w", leaf2) == P(None, "model")
+    moe = jax.ShapeDtypeStruct((16, 64, 2048, 1024), jnp.bfloat16)
+    assert sh.param_pspec("layers/moe/w_gate", moe) == P(None, "model", None, None)
+    assert sh.param_pspec("final_norm/scale",
+                          jax.ShapeDtypeStruct((4096,), jnp.bfloat16)) == P()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_model_axis_shards_divide(arch):
+    """Every dim assigned to `model` must divide by 16 (no silent padding of
+    weights — activations may pad, weights should not)."""
+    cfg = get_config(arch)
+    specs = M.param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    bad = []
+    for path, leaf in flat:
+        pstr = sh._path_str(path)
+        pspec = sh.param_pspec(pstr, leaf)
+        for dim, ax in enumerate(pspec):
+            if ax == "model" and leaf.shape[dim] % 16 != 0:
+                bad.append((pstr, leaf.shape, dim))
+    # known exception: odd vocab sizes (GSPMD pads the embedding table)
+    bad = [b for b in bad if "embed" not in b[0] and "lm_head" not in b[0]]
+    assert not bad, f"{arch}: non-divisible model shards {bad}"
+
+
+def test_zero1_opt_sharding_adds_data_axis():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.train.optimizer import init_opt_state
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.param_specs(cfg)
+    opt = jax.eval_shape(init_opt_state, params)
+    shard = sh.opt_state_shardings(opt, mesh)
+    # moments of a (L, d, f) weight should carry both model and data axes
+    m_wgate = shard.m["layers"]["mlp"]["w_gate"]
+    spec = m_wgate.spec
+    axes = {a for s in spec if s for a in (s if isinstance(s, tuple) else (s,))}
+    assert "model" in axes and "data" in axes
+
+
+def test_cache_sharding_long_context_folds_all_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("zamba2-7b")
+    spec = SHAPES["long_500k"]
+    cache = M.decode_cache_specs(cfg, spec.global_batch, spec.seq_len)
+    shardings = sh.cache_shardings(cfg, spec, mesh, cache)
+    kspec = shardings["k"].spec
+    # L axis of K (dim -1) carries data+model when batch=1
+    assert kspec[-1] is not None
+    axes = kspec[-1] if isinstance(kspec[-1], tuple) else (kspec[-1],)
+    assert "model" in axes and "data" in axes

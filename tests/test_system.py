@@ -1,0 +1,69 @@
+"""End-to-end behaviour: engine modes, schedules, and token equivalence."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim_modes import Mode, plan_step
+from repro.models import model as M
+from repro.serve.engine import Engine
+
+PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8]] * 3 + [[3, 1, 4, 1, 5, 9, 2, 6]] * 3
+
+
+@pytest.fixture(scope="module")
+def llama_setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _gen(cfg, params, mode, **kw):
+    eng = Engine(cfg, params, max_len=64, slots=3, mode=mode, chunk=4, **kw)
+    out = eng.generate(PROMPTS, max_new=6)
+    return out, eng
+
+
+def test_modes_produce_identical_tokens(llama_setup):
+    cfg, params = llama_setup
+    outs = {m: _gen(cfg, params, m)[0] for m in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM)}
+    assert outs[Mode.BLOCKED] == outs[Mode.HBCEM] == outs[Mode.LBIM]
+
+
+def test_lbim_overlaps_prefill_with_decode(llama_setup):
+    cfg, params = llama_setup
+    _, eng = _gen(cfg, params, Mode.LBIM)
+    rep = eng.schedule_report()
+    assert rep["fused_steps"] > 0, "LBIM must fuse decode with prefill chunks"
+    assert "MACT_LDB" in rep["modes"]
+
+
+def test_blocked_never_fuses(llama_setup):
+    cfg, params = llama_setup
+    _, eng = _gen(cfg, params, Mode.BLOCKED)
+    assert eng.schedule_report()["fused_steps"] == 0
+
+
+def test_ragged_wave_matches_single_sequence(llama_setup):
+    cfg, params = llama_setup
+    prompts = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9]]
+    eng = Engine(cfg, params, max_len=64, slots=4, mode=Mode.HBCEM)
+    batched = eng.generate(prompts, max_new=4)
+    for i, p in enumerate(prompts):
+        single = Engine(cfg, params, max_len=64, slots=1,
+                        mode=Mode.HBCEM).generate([p], max_new=4)[0]
+        assert single == batched[i]
+
+
+def test_plan_step_policy():
+    assert plan_step(Mode.LBIM, True, True, 8).fused
+    assert not plan_step(Mode.HBCEM, True, True, 8).fused
+    assert plan_step(Mode.BLOCKED, True, True, 8).prefill_chunk == 0 or \
+        not plan_step(Mode.BLOCKED, True, True, 8).decode
+
+
+def test_state_family_rejects_ragged():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=32, slots=2, mode=Mode.HBCEM)
+    with pytest.raises(ValueError):
+        eng.generate([[1, 2, 3], [1, 2]], max_new=2)
