@@ -63,6 +63,15 @@ class ModelConfig:
     frontend: Optional[str] = None    # "vision" | "audio" (stubbed embeddings)
     n_prefix_tokens: int = 0          # vlm: image patch embeds prepended
 
+    # --- decode backend dispatch (core/dispatch.py) ---------------------------
+    attn_backend: str = "auto"        # auto | pallas | interpret | reference | dense
+                                      # auto: Pallas decode kernels on TPU, jnp
+                                      # oracle elsewhere; dense = legacy einsum
+    decode_block_l: int = 512         # L-tile of the decode-attention kernel
+    quantized_decode: bool = False    # W8A8 PIM-GEMV for decode-time qkv/o/MLP
+                                      # projections (paper's INT8 CU path)
+    quant_decode_max_batch: int = 8   # largest GEMV batch routed to W8A8
+
     # --- misc -----------------------------------------------------------------
     tie_embeddings: bool = False
     norm_eps: float = 1e-5

@@ -1,0 +1,142 @@
+"""Backend dispatch for the decode hot path.
+
+This is the glue the paper's speedup actually lives in: the dual-layout
+decode-attention kernel and the pipelined INT8 GEMV are only wins if the
+*serving* path calls them. ``ModelConfig`` selects the backend:
+
+``attn_backend``
+    * ``"auto"``       — Pallas kernel on TPU, jnp oracle elsewhere (default)
+    * ``"pallas"``     — force the compiled Pallas kernel
+    * ``"interpret"``  — Pallas kernel in interpret mode (CPU tests exercise
+      the real kernel lowering, not just the oracle)
+    * ``"reference"``  — the pure-jnp oracle (float32, full-Lmax einsum)
+    * ``"dense"``      — bypass dispatch entirely: the legacy dense-einsum
+      path inside ``models.attention`` (the baseline the kernels are
+      validated against at the token level)
+
+``quantized_decode``
+    Route decode-time linear projections (qkv / o / MLP) through the W8A8
+    ``linear_w8a8`` PIM-GEMV path — the paper's INT8 CU datapath — whenever
+    the activation is a low-batch single-token GEMV shape
+    (``T == 1 and B <= quant_decode_max_batch``). Prefill and training are
+    untouched: at GEMM shapes the MXU is compute-bound and int8 buys nothing.
+
+Every routed op keeps a jnp reference fallback so CPU CI produces tokens
+comparable with the TPU path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.pim_gemv.ops import linear_w8a8
+
+_KERNEL_BACKENDS = ("pallas", "interpret")
+BACKENDS = ("auto", "pallas", "interpret", "reference", "dense")
+
+
+def resolve_backend(cfg) -> str:
+    """Concrete backend for this process (``auto`` keys off the jax platform).
+
+    Unknown names raise immediately — a typo'd backend must not silently
+    serve from the fallback path while the operator believes the kernel ran.
+    """
+    if cfg.attn_backend not in BACKENDS:
+        raise ValueError(
+            f"attn_backend={cfg.attn_backend!r} unknown; expected one of {BACKENDS}")
+    if cfg.attn_backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return cfg.attn_backend
+
+
+def use_dispatch(cfg) -> bool:
+    """False only for the legacy dense-einsum baseline."""
+    return resolve_backend(cfg) != "dense"
+
+
+def decode_attention(
+    q: jax.Array,        # (B, Hq, hd) single-token query heads
+    k_cache: jax.Array,  # (B, Hkv, hd, Lmax) column-wise
+    v_cache: jax.Array,  # (B, Hkv, Lmax, hd) row-wise
+    end,                 # scalar or (B,) — live range [start, end) per sequence
+    *,
+    start=None,
+    scale: float,
+    softcap=None,
+    cfg,
+) -> jax.Array:
+    """Dispatched decode-attention GEMV pair. Returns (B, Hq, hd) float32."""
+    backend = resolve_backend(cfg)
+    return decode_attention_op(
+        q, k_cache, v_cache, end,
+        start=start,
+        scale=scale,
+        softcap=softcap,
+        block_l=cfg.decode_block_l,
+        interpret=(backend == "interpret"),
+        use_kernel=(backend in _KERNEL_BACKENDS),
+    )
+
+
+def _gemv_shaped(cfg, x: jax.Array) -> bool:
+    """Low-batch single-token decode activation (B, 1, d) — the paper's CU
+    operating point (batch 1..8 GEMVs)."""
+    return (cfg.quantized_decode and x.ndim == 3 and x.shape[1] == 1
+            and x.shape[0] <= cfg.quant_decode_max_batch)
+
+
+def linear(w: jax.Array, x: jax.Array, cfg) -> jax.Array:
+    """``x @ w`` with the W8A8 PIM-GEMV path at quantized-decode GEMV shapes.
+
+    w: (K, N) float (the repo's row-major weight convention); x: (..., K).
+
+    NOTE: weights are quantized on the fly (transpose + per-channel scale per
+    step), which is accuracy-faithful but re-reads the float weights each
+    step — fine for validating the INT8 datapath on CPU/interpret, wrong for
+    production bandwidth. The deployment-shaped follow-up is pre-quantizing
+    the param tree once at load and feeding ``pim_gemv_int8`` directly.
+    """
+    if not _gemv_shaped(cfg, x):
+        return x @ w
+    b, t, k = x.shape
+    backend = resolve_backend(cfg)
+    y = linear_w8a8(
+        jnp.swapaxes(w, -1, -2),            # weight-stationary (N, K)
+        x.reshape(b * t, k),
+        interpret=(backend == "interpret"),
+        use_kernel=(backend in _KERNEL_BACKENDS),
+    )
+    return y.reshape(b, t, -1).astype(x.dtype)
+
+
+def mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Gated-MLP through the dispatched (possibly W8A8) linears."""
+    from repro.models import layers as L  # local import: avoid a cycle at init
+    return L.mlp(p, x, linear_fn=lambda w, xx: linear(w, xx, cfg))
+
+
+def projected_decode_attn_bytes(
+    batch: int,
+    n_kv_heads: int,
+    head_dim: int,
+    lmax: int,
+    pos: int,
+    *,
+    block_l: int = 512,
+    itemsize: int = 2,
+    dispatched: bool = True,
+) -> int:
+    """Decode-step HBM cache traffic model for one attention layer.
+
+    The dispatched kernel streams only live K/V tiles (dead tiles re-address
+    the previous block and are skipped by the pipeline), so traffic scales
+    with ``pos``; the dense path reads the full ``Lmax`` cache every step.
+    """
+    bl = min(block_l, lmax)
+    if dispatched:
+        live_tiles = -(-max(pos, 0) // bl)            # ceil(pos / BL)
+        cols = min(live_tiles * bl, -(-lmax // bl) * bl)
+    else:
+        cols = lmax
+    return 2 * batch * n_kv_heads * head_dim * cols * itemsize  # K + V streams

@@ -11,6 +11,12 @@ separate programs (the serialization the paper measures against).
 
 Both halves use the same weights — the "two Pbanks each" split is a
 scheduling statement, not a weight copy.
+
+The decode half's attention and (under ``cfg.quantized_decode``) its linear
+projections route through ``repro.core.dispatch`` — the Pallas flash-decode
+kernel / W8A8 PIM-GEMV on TPU, jnp oracles elsewhere — while the prefill
+half's multi-token chunks keep the dense GEMM path: inside one fused XLA
+program that is exactly the paper's GEMV-class/GEMM-class Pbank split.
 """
 from __future__ import annotations
 

@@ -1,0 +1,31 @@
+"""Gradient-compression collectives (beyond-paper, 1-bit-Adam lineage).
+
+Data-parallel gradient all-reduces dominate inter-pod traffic at 512 chips.
+INT8 compression with per-row symmetric scales — the same quantization the
+CD-PIM CU applies to weights/activations (§III) — cuts those bytes 4x vs
+f32 (2x vs bf16). Used with error feedback (caller accumulates the residual
+``g - dequantize(quantize(g))`` into the next step) the compression is
+unbiased over time; ``tests/test_collectives.py`` checks both properties.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_grad(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row INT8 quantization of a gradient tensor.
+
+    Returns ``(q_int8, scale_f32)`` with ``scale`` keeping the reduced axis
+    (keepdims) so ``dequantize_grad`` is a plain broadcast multiply.
+    """
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_grad(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_grad` (exact up to the rounding step)."""
+    return q.astype(jnp.float32) * scale

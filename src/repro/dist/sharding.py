@@ -1,0 +1,169 @@
+"""Sharding rules for params, optimizer state, batches, and KV caches.
+
+Megatron-style tensor parallelism over the ``model`` axis:
+
+* column-parallel weights (``w_gate``/``w_up``/``wq``/``wk``/``wv``/…) shard
+  their OUTPUT dim; row-parallel weights (``w_down``/``wo``/…) shard their
+  INPUT (contracted) dim — one all-reduce per block, halved again by the
+  sequence-parallel constraint in ``models.model``.
+* MoE expert tables shard the EXPERT dim (expert parallelism).
+* the embedding table shards its vocab rows; the LM head its vocab columns
+  (GSPMD pads odd vocab sizes — the one sanctioned padding exception).
+* any dim not divisible by :data:`MODEL_SHARD` stays replicated — weights
+  are never silently padded (``tests/test_sharding.py`` enforces this).
+
+Optimizer moments additionally fold the ``data`` axis into their first
+replicated dim (ZeRO-1: each data rank owns a slice of the f32 state).
+Decode KV caches shard batch over the data axes when the batch is wide, and
+fold ALL mesh axes into the sequence dim for batch-1 long-context decode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import all_axes, batch_axes
+
+MODEL_SHARD = 16  # `model` mesh-axis size every production mesh uses
+
+# row-parallel weights: contract the sharded input dim (Megatron pair rule)
+_ROW_PARALLEL = {"w_down", "wo", "w_out", "w_b", "cm_wv"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _divisible(shape, dim: int) -> bool:
+    return shape[dim] % MODEL_SHARD == 0
+
+
+def param_pspec(path: str, leaf) -> P:
+    """PartitionSpec for one parameter leaf addressed by its tree path."""
+    shape = leaf.shape
+    nd = len(shape)
+    parts = path.split("/")
+    name = parts[-1]
+    if nd <= 1 or name in ("scale", "bias") or "norm" in path:
+        return P()
+    if "embed" in parts:  # (V, d): shard vocab rows (GSPMD pads odd vocabs)
+        return P("model", *([None] * (nd - 1)))
+    if "lm_head" in parts:  # (d, V): shard vocab columns
+        return P(*([None] * (nd - 1)), "model")
+    if "moe" in parts:  # (L?, E, d, f) expert tables: expert parallelism
+        e_dim = nd - 3
+        if _divisible(shape, e_dim):
+            spec = [None] * nd
+            spec[e_dim] = "model"
+            return P(*spec)
+        return P()
+    if name in _ROW_PARALLEL:  # (..., in, out): shard the contracted input dim
+        if _divisible(shape, nd - 2):
+            return P(*([None] * (nd - 2)), "model", None)
+        return P()
+    # default column-parallel: shard the output (last) dim
+    if _divisible(shape, nd - 1):
+        return P(*([None] * (nd - 1)), "model")
+    return P()
+
+
+def param_shardings(params, mesh):
+    """NamedSharding tree mirroring an (abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(_path_str(path), leaf)),
+        params)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _with_data_axis(spec: P, leaf, mesh) -> P:
+    """ZeRO-1: fold the data axes into the first replicated dim of a moment."""
+    ba = batch_axes(mesh)
+    nb = math.prod(mesh.shape[a] for a in ba)
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    for dim, e in enumerate(entries):
+        if e is None and leaf.shape[dim] % max(nb, 1) == 0:
+            entries[dim] = ba if len(ba) > 1 else ba[0]
+            return P(*entries)
+    return spec
+
+
+def opt_state_shardings(opt_state, mesh):
+    """Shardings for OptState(step, m, v): param rules + ZeRO-1 data folding."""
+    def moments(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                mesh,
+                _with_data_axis(param_pspec(_path_str(path), leaf), leaf, mesh)
+                if leaf.ndim >= 1 else P()),
+            tree)
+
+    return type(opt_state)(step=replicated(mesh),
+                           m=moments(opt_state.m), v=moments(opt_state.v))
+
+
+def batch_shardings(cfg, spec, mesh, batch):
+    """Model inputs shard their leading (global-batch) dim over the data axes."""
+    ba = batch_axes(mesh)
+    nb = math.prod(mesh.shape[a] for a in ba)
+
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % nb == 0:
+            return NamedSharding(
+                mesh, P(ba if len(ba) > 1 else ba[0], *([None] * (leaf.ndim - 1))))
+        return replicated(mesh)
+
+    return jax.tree.map(one, batch)
+
+
+# KV-cache leaves and where their sequence (L) axis lives under the cdpim
+# dual layout: K column-wise (L last), V / cross-KV row-wise (L second-last).
+_KV_L_AXIS = {"k": -1, "k_loc": -1, "v": -2, "v_loc": -2,
+              "cross_k": -2, "cross_v": -2}
+
+
+def cache_shardings(cfg, spec, mesh, cache):
+    """Decode-cache shardings.
+
+    Wide-batch decode shards the batch dim (axis 1 of every (nL, B, ...)
+    leaf) over the data axes. Batch-1 long-context decode instead folds ALL
+    mesh axes into the KV sequence dim — the 500k-token cache is the only
+    tensor large enough to occupy the whole mesh.
+    """
+    ba = batch_axes(mesh)
+    nb = math.prod(mesh.shape[a] for a in ba)
+    ndev = int(mesh.devices.size)
+    fold = tuple(all_axes(mesh))
+
+    def one(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return replicated(mesh)
+        name = _path_str(path).split("/")[-1]
+        wide = spec.global_batch > 1 and spec.global_batch % nb == 0
+        if wide and leaf.ndim >= 3 and leaf.shape[1] == spec.global_batch:
+            return NamedSharding(
+                mesh, P(None, ba if len(ba) > 1 else ba[0],
+                        *([None] * (leaf.ndim - 2))))
+        if name in _KV_L_AXIS and leaf.ndim >= 4:
+            l_ax = leaf.ndim + _KV_L_AXIS[name]
+            if leaf.shape[l_ax] % ndev == 0:
+                entries = [None] * leaf.ndim
+                entries[l_ax] = fold if len(fold) > 1 else fold[0]
+                return NamedSharding(mesh, P(*entries))
+        return replicated(mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -13,8 +13,20 @@ layouts make both phases of flash-decoding stream the cache contiguously:
   (outer-product flow over K columns);
 * output tile:  p (G, BL) @ V (BL, hd)   — contracts L (inner-product flow
   over V rows).
-* positions ≥ pos are masked; tiles entirely beyond pos are skipped with
-  @pl.when (the Pbank-disable analogue — no bandwidth spent on dead cache).
+
+Per-sequence attention ranges (continuous batching)
+---------------------------------------------------
+``start``/``end`` are per-sequence ``(B,)`` int32 arrays delivered by scalar
+prefetch: each sequence attends to cache positions ``[start[b], end[b])``.
+``start > 0`` expresses sliding-window layers over a full-length cache; the
+plain causal decode uses ``start = 0, end = pos + 1``.
+
+Dead-tile skip (the Pbank-disable analogue): tiles entirely outside the live
+range never execute (``@pl.when``), and — because the K/V BlockSpec index
+maps clamp the L-tile index into the live range — the pipeline re-addresses
+the last live block for dead grid steps, so Pallas' block-revisiting
+optimization issues **no new HBM copy** for them. Decode-step cache traffic
+therefore scales with the actual fill level, not ``Lmax``.
 """
 from __future__ import annotations
 
@@ -29,11 +41,13 @@ NEG_INF = -2.3819763e38
 DEFAULT_BLOCK_L = 512
 
 
-def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+def _decode_attn_kernel(start_ref, end_ref, q_ref, k_ref, v_ref, o_ref,
                         m_ref, l_ref, acc_ref, *, block_l: int, n_l: int,
                         scale: float, softcap: float | None):
+    i = pl.program_id(0)
     li = pl.program_id(2)
-    pos = pos_ref[0]
+    start = start_ref[i]
+    end = end_ref[i]
 
     @pl.when(li == 0)
     def _init():
@@ -41,8 +55,8 @@ def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # skip tiles entirely past the valid prefix (dead Pbanks stay dark)
-    @pl.when(li * block_l < pos)
+    # live tiles only: [start, end) ∩ [li·BL, (li+1)·BL) ≠ ∅ (dead Pbanks dark)
+    @pl.when((li * block_l < end) & ((li + 1) * block_l > start))
     def _tile():
         q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
         k = k_ref[0, 0].astype(jnp.float32)           # (hd, BL) column-wise
@@ -53,7 +67,7 @@ def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         idx = li * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(idx < pos, s, NEG_INF)
+        s = jnp.where((idx >= start) & (idx < end), s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -68,7 +82,18 @@ def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(li == n_l - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+        # empty range (end <= start, e.g. pos == 0) -> defined zero output
+        l = l_ref[...]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _clamp_tile(l, start, end, bl):
+    """Clamp the L-tile index into the live range so dead grid steps re-address
+    the previous live block (same index ⇒ Pallas skips the HBM copy)."""
+    first = start // bl
+    last = jnp.maximum((end + bl - 1) // bl - 1, first)
+    return jnp.clip(l, first, last)
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "scale", "softcap", "interpret"))
@@ -76,7 +101,8 @@ def decode_attention(
     q: jax.Array,        # (B, Hkv, G, hd)
     k_cache: jax.Array,  # (B, Hkv, hd, Lmax) column-wise
     v_cache: jax.Array,  # (B, Hkv, Lmax, hd) row-wise
-    pos: jax.Array,      # scalar int32 — valid prefix length
+    pos: jax.Array,      # (B,) int32 — end of the live range (exclusive)
+    start: jax.Array,    # (B,) int32 — start of the live range (inclusive)
     *,
     scale: float,
     softcap: float | None = None,
@@ -87,30 +113,36 @@ def decode_attention(
     lmax = k_cache.shape[-1]
     bl = min(block_l, lmax)
     if lmax % bl:
-        raise ValueError(f"Lmax={lmax} must divide block_l={bl}")
+        raise ValueError(
+            f"block_l={bl} must divide Lmax={lmax} (ops.decode_attention_op "
+            f"pads the cache to the tile grid for you)")
     n_l = lmax // bl
     grid = (b, hkv, n_l)
 
     kernel = functools.partial(
         _decode_attn_kernel, block_l=bl, n_l=n_l, scale=scale, softcap=softcap)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,  # pos arrives in SMEM ahead of the pipeline
+        num_scalar_prefetch=2,  # start/end arrive in SMEM ahead of the pipeline
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda i, j, l, pos_ref: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, hd, bl), lambda i, j, l, pos_ref: (i, j, 0, l)),
-            pl.BlockSpec((1, 1, bl, hd), lambda i, j, l, pos_ref: (i, j, l, 0)),
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, l, sr, er: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd, bl),
+                         lambda i, j, l, sr, er: (i, j, 0, _clamp_tile(l, sr[i], er[i], bl))),
+            pl.BlockSpec((1, 1, bl, hd),
+                         lambda i, j, l, sr, er: (i, j, _clamp_tile(l, sr[i], er[i], bl), 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, l, pos_ref: (i, j, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, l, sr, er: (i, j, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),      # m: running max
             pltpu.VMEM((g,), jnp.float32),      # l: running denominator
             pltpu.VMEM((g, hd), jnp.float32),   # acc: output buffer
         ],
     )
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    end_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k_cache, v_cache)
+    )(start_b, end_b, q, k_cache, v_cache)

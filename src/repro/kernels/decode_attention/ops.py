@@ -1,4 +1,10 @@
-"""Public wrapper: padding + GQA reshape + jnp fallback for decode attention."""
+"""Public wrapper: padding + GQA reshape + jnp fallback for decode attention.
+
+``pos``/``start`` may be scalars (all sequences aligned) or ``(B,)`` arrays
+(continuous batching with per-sequence fill levels); each sequence attends to
+cache positions ``[start, pos)``. ``start`` expresses sliding-window layers
+over a full-length cache.
+"""
 from __future__ import annotations
 
 import jax
@@ -12,8 +18,9 @@ def decode_attention_op(
     q: jax.Array,        # (B, Hq, hd) — ungrouped query heads
     k_cache: jax.Array,  # (B, Hkv, hd, Lmax)
     v_cache: jax.Array,  # (B, Hkv, Lmax, hd)
-    pos,
+    pos,                 # scalar or (B,) int32 — end of live range (exclusive)
     *,
+    start=None,          # scalar or (B,) int32 — live-range start; None -> 0
     scale: float,
     softcap: float | None = None,
     block_l: int = 512,
@@ -26,7 +33,8 @@ def decode_attention_op(
     g = hq // hkv
     qg = q.reshape(b, hkv, g, hd)
     if not use_kernel:
-        out = decode_attention_ref(qg, k_cache, v_cache, pos, scale, softcap)
+        out = decode_attention_ref(qg, k_cache, v_cache, pos, scale, softcap,
+                                   start=start)
         return out.reshape(b, hq, hd)
     lmax = k_cache.shape[-1]
     bl = min(block_l, lmax)
@@ -34,6 +42,7 @@ def decode_attention_op(
     if rem:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, 0), (0, rem)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, rem), (0, 0)))
-    out = decode_attention(qg, k_cache, v_cache, pos, scale=scale,
+    start = jnp.zeros((b,), jnp.int32) if start is None else start
+    out = decode_attention(qg, k_cache, v_cache, pos, start, scale=scale,
                            softcap=softcap, block_l=bl, interpret=interpret)
     return out.reshape(b, hq, hd)

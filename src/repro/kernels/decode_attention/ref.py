@@ -10,20 +10,28 @@ def decode_attention_ref(
     q: jnp.ndarray,        # (B, Hkv, G, hd) — grouped query heads
     k_cache: jnp.ndarray,  # (B, Hkv, hd, Lmax) — column-wise (paper §III-C)
     v_cache: jnp.ndarray,  # (B, Hkv, Lmax, hd) — row-wise
-    pos: jnp.ndarray | int,  # number of valid cache entries (attend to [0, pos))
+    pos: jnp.ndarray | int,  # scalar or (B,): attend to [start, pos) per sequence
     scale: float,
     softcap: float | None = None,
+    start: jnp.ndarray | int | None = None,  # scalar or (B,); None -> 0
 ) -> jnp.ndarray:
-    """Returns (B, Hkv, G, hd) float32."""
+    """Returns (B, Hkv, G, hd) float32. Empty ranges (pos <= start) yield zeros
+    — the defined semantics the Pallas kernel shares (division guard)."""
+    b = q.shape[0]
     lmax = k_cache.shape[-1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
     # outer-product flow: contract hd against K columns
     s = jnp.einsum("bkgd,bkdl->bkgl", q.astype(jnp.float32), k_cache.astype(jnp.float32))
     s = s * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    valid = jnp.arange(lmax) < pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    idx = jnp.arange(lmax)
+    valid = (idx[None, :] >= start_b[:, None]) & (idx[None, :] < pos_b[:, None])  # (B, L)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)  # empty range -> zero output
     # inner-product flow: contract L against V rows
     return jnp.einsum("bkgl,bkld->bkgd", p, v_cache.astype(jnp.float32))

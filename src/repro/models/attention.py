@@ -8,7 +8,12 @@ optional *causal block skip* (beyond-paper optimization, see EXPERIMENTS.md
 
 Decode consumes the CD-PIM dual-layout cache from ``repro.core.kv_mapping``:
 K column-wise (outer-product score flow), V row-wise (inner-product output
-flow) — the paper's §III-C mapping.
+flow) — the paper's §III-C mapping. Single-token decode steps route through
+``repro.core.dispatch`` (Pallas flash-decode kernel on TPU, jnp oracle on
+CPU, legacy dense einsum with ``attn_backend="dense"``); the dispatched path
+takes per-sequence ``[start, end)`` attention ranges, so sliding-window and
+ring-buffer layers hit the same kernel. With ``cfg.quantized_decode`` the
+decode-time qkv/o projections run as W8A8 PIM GEMVs.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import kv_mapping
+from repro.core import dispatch, kv_mapping
 from repro.models.layers import apply_rope, dense_init, softcap
 
 NEG_INF = -2.3819763e38  # bf16-safe large negative
@@ -42,13 +47,18 @@ def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None) -> dict
     return p
 
 
-def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
-    """x (B,T,d) -> q (B,Hq,T,hd), k/v (B,Hkv,T,hd), RoPE applied."""
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                 linear_fn=None):
+    """x (B,T,d) -> q (B,Hq,T,hd), k/v (B,Hkv,T,hd), RoPE applied.
+
+    ``linear_fn`` overrides the matmul (decode injects the dispatched,
+    possibly W8A8-quantized, GEMV from ``core.dispatch``)."""
     b, t, _ = x.shape
     hd = cfg.head_dim
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    mm = linear_fn or _dense_matmul
+    q = mm(p["wq"], x)
+    k = mm(p["wk"], x)
+    v = mm(p["wv"], x)
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
@@ -63,6 +73,17 @@ def _scale(cfg: ModelConfig) -> float:
     if cfg.attn_scale_override is not None:
         return cfg.attn_scale_override
     return cfg.head_dim ** -0.5
+
+
+def _dense_matmul(w: jax.Array, x: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def _decode_linear(cfg: ModelConfig):
+    """Decode-time matmul: W8A8 PIM GEMV at quantized GEMV shapes, else dense."""
+    if cfg.quantized_decode:
+        return lambda w, xx: dispatch.linear(w, xx, cfg)
+    return _dense_matmul
 
 
 def _mask_bias(q_pos, k_pos, window: Optional[int], causal: bool) -> jax.Array:
@@ -194,10 +215,23 @@ def attention_decode_ring(
     assert t == 1, "ring cache is a steady-state decode structure"
     w = k_ring.shape[-1]
     hd = cfg.head_dim
-    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))[:, None]
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
+    positions = pos_b[:, None]
+    lin = _decode_linear(cfg)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, linear_fn=lin)
     rpos = jnp.asarray(pos) % w
     k_ring, v_ring = kv_mapping.append_layer(k_ring, v_ring, k_new, v_new, rpos, "cdpim")
+
+    if dispatch.use_dispatch(cfg):
+        # after the append the ring's VALID slots are exactly the prefix
+        # [0, min(pos+1, W)) — softmax is permutation-invariant, so the same
+        # prefix-range kernel serves the ring layout (see module docstring).
+        end = jnp.minimum(pos_b + 1, w).astype(jnp.int32)
+        o = dispatch.decode_attention(
+            q[:, :, 0, :], k_ring, v_ring, end,
+            scale=_scale(cfg), softcap=cfg.attn_softcap, cfg=cfg)
+        y = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
+        return lin(p["wo"], y), k_ring, v_ring
 
     g = cfg.q_per_kv
     qg = q.reshape(b, cfg.n_kv_heads, g, t, hd)
@@ -211,7 +245,7 @@ def attention_decode_ring(
     pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     y = kv_mapping.read_output(pr, v_ring, "cdpim")
     y = y.reshape(b, cfg.n_heads, t, hd).transpose(0, 2, 1, 3).reshape(b, t, -1)
-    return y @ p["wo"], k_ring, v_ring
+    return lin(p["wo"], y), k_ring, v_ring
 
 
 def attention_decode(
@@ -231,14 +265,30 @@ def attention_decode(
     batching with per-sequence fill levels. Returns (y, k_cache', v_cache').
     Score flow contracts hd against the column-wise K cache; output flow
     contracts L against the row-wise V cache.
+
+    Single-token steps (T == 1) on the cdpim layout go through the backend
+    dispatch (``core.dispatch``): the Pallas flash-decode kernel on TPU, the
+    jnp oracle elsewhere, with per-sequence live range ``[end-window, end)``
+    so work scales with actual fill, not Lmax. Multi-token steps (chunked
+    prefill) and the ablation layouts keep the dense einsum.
     """
     b, t, d = x.shape
     hd = cfg.head_dim
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,)) if jnp.ndim(pos) <= 1 else pos
     positions = pos_b[:, None] + jnp.arange(t)[None, :]  # (B, T)
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    lin = _decode_linear(cfg) if t == 1 else None
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, linear_fn=lin)
 
     k_cache, v_cache = kv_mapping.append_layer(k_cache, v_cache, k_new, v_new, pos, layout)
+
+    if t == 1 and layout == "cdpim" and dispatch.use_dispatch(cfg):
+        end = (pos_b + 1).astype(jnp.int32)  # the just-appended token is visible
+        start = None if window is None else jnp.maximum(end - window, 0).astype(jnp.int32)
+        o = dispatch.decode_attention(
+            q[:, :, 0, :], k_cache, v_cache, end, start=start,
+            scale=_scale(cfg), softcap=cfg.attn_softcap, cfg=cfg)
+        y = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
+        return lin(p["wo"], y), k_cache, v_cache
 
     lmax = k_cache.shape[-1] if layout in ("cdpim", "col_col") else k_cache.shape[-2]
     g = cfg.q_per_kv
@@ -257,4 +307,5 @@ def attention_decode(
     pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     y = kv_mapping.read_output(pr, v_cache, layout)
     y = y.reshape(b, cfg.n_heads, t, hd).transpose(0, 2, 1, 3).reshape(b, t, -1)
-    return y @ p["wo"], k_cache, v_cache
+    proj = lin or _dense_matmul
+    return proj(p["wo"], y), k_cache, v_cache

@@ -91,16 +91,19 @@ def init_mlp(key, d: int, f: int, dtype) -> dict:
     }
 
 
-def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
-    g = x @ p["w_gate"]
-    u = x @ p["w_up"]
+def mlp(p: dict, x: jax.Array, act: str = "silu", linear_fn=None) -> jax.Array:
+    """``linear_fn(w, x)`` overrides the matmul — the decode path injects the
+    dispatched (possibly W8A8 PIM-GEMV) linear from ``core.dispatch``."""
+    mm = linear_fn or (lambda w, xx: xx @ w)
+    g = mm(p["w_gate"], x)
+    u = mm(p["w_up"], x)
     if act == "silu":
         g = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
     elif act == "gelu":
         g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
     else:
         raise ValueError(act)
-    return (g * u) @ p["w_down"]
+    return mm(p["w_down"], g * u)
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import kv_mapping
+from repro.core import dispatch, kv_mapping
 from repro.models import attention as attn_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -272,7 +272,7 @@ def _dense_block_decode(lp, x, kc, vc, pos, cfg: ModelConfig, flag):
     if cfg.family == "moe":
         m = moe_lib.moe(lp["moe"], h, cfg, impl=cfg_moe_impl(cfg))
     else:
-        m = L.mlp(lp["mlp"], h)
+        m = dispatch.mlp(lp["mlp"], h, cfg)  # W8A8 GEMVs under quantized_decode
     if cfg.post_block_norm:
         m = L.rmsnorm(lp["post_mlp_norm"], m, cfg.norm_eps)
     return x + m, kc, vc
@@ -550,8 +550,24 @@ def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int, src_len: int 
 # ===========================================================================
 
 
-def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[jax.Array, dict]:
-    """Process the full prompt; return (last-position logits, filled cache)."""
+def _last_hidden(x: jax.Array, seq_lens) -> jax.Array:
+    """Per-sequence last-token hidden states (B, 1, d) from one prefill pass.
+
+    ``seq_lens`` (B,) supports ragged waves (continuous batching): sequence i
+    reads position ``seq_lens[i] - 1``; None means all rows end at -1."""
+    if seq_lens is None:
+        return x[:, -1:, :]
+    idx = jnp.asarray(seq_lens, jnp.int32) - 1
+    return x[jnp.arange(x.shape[0]), idx][:, None, :]
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int,
+            seq_lens=None) -> tuple[jax.Array, dict]:
+    """Process the full prompt; return (last-position logits, filled cache).
+
+    ``seq_lens`` (B,) marks each sequence's true prompt length in a ragged
+    (right-padded) wave; logits are gathered at those positions in THIS pass
+    — no second forward is needed to recover ragged last-token logits."""
     tokens = batch["tokens"]
     b = tokens.shape[0]
 
@@ -561,7 +577,7 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         cache = dict(states)
         cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
-        return logits_fn(params, x[:, -1:, :], cfg), cache
+        return logits_fn(params, _last_hidden(x, seq_lens), cfg), cache
 
     if cfg.family == "hybrid":
         x = L.embed(params["embed"], tokens)
@@ -577,7 +593,7 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[
             cache["v"] = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
         cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
-        return logits_fn(params, x[:, -1:, :], cfg), cache
+        return logits_fn(params, _last_hidden(x, seq_lens), cfg), cache
 
     if cfg.family == "audio":
         mem = _audio_encode(params, batch["src_frames"].astype(jnp.dtype(cfg.dtype)), cfg)
@@ -593,7 +609,7 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[
             cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
         cache["cross_k"], cache["cross_v"] = cross_k.astype(cache["cross_k"].dtype), cross_v.astype(cache["cross_v"].dtype)
         cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
-        return logits_fn(params, x[:, -1:, :], cfg), cache
+        return logits_fn(params, _last_hidden(x, seq_lens), cfg), cache
 
     # dense / vlm / moe
     x = L.embed(params["embed"], tokens)
@@ -601,6 +617,10 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[
         x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
     if cfg.family == "vlm" and "prefix_embeds" in batch:
         x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        if seq_lens is not None:
+            # x (and the cache positions) are prefix-shifted: sequence i's
+            # last token sits at n_prefix + seq_lens[i] - 1
+            seq_lens = jnp.asarray(seq_lens) + batch["prefix_embeds"].shape[1]
     x, kvs = _scan_layers(params, x, cfg, collect_kv=True)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     s_total = x.shape[1]
@@ -623,13 +643,13 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int) -> tuple[
         cache["v"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], v_new[1::2].astype(cache["v"].dtype), 0, axis=3)
         cache["pos"] = jnp.asarray(s_total, jnp.int32)
-        return logits_fn(params, x[:, -1:, :], cfg), cache
+        return logits_fn(params, _last_hidden(x, seq_lens), cfg), cache
     cache["k"] = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], jnp.swapaxes(k_new, -1, -2).astype(cache["k"].dtype), 0, axis=4)
     cache["v"] = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3)
     cache["pos"] = jnp.asarray(s_total, jnp.int32)
-    return logits_fn(params, x[:, -1:, :], cfg), cache
+    return logits_fn(params, _last_hidden(x, seq_lens), cfg), cache
 
 
 # ===========================================================================
@@ -678,7 +698,7 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
             h2 = L.rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
             h = h + attn_lib.attention_cross(lp["cross_attn"], h2, (ck, cv), cfg)
             h2 = L.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
-            h = h + L.mlp(lp["mlp"], h2)
+            h = h + dispatch.mlp(lp["mlp"], h2, cfg)
             kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
             vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
             return (h, kc_all, vc_all), None
@@ -720,7 +740,7 @@ def _mlp_tail(lp: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.family == "moe":
         m = moe_lib.moe(lp["moe"], h, cfg, impl=cfg_moe_impl(cfg))
     else:
-        m = L.mlp(lp["mlp"], h)
+        m = dispatch.mlp(lp["mlp"], h, cfg)  # W8A8 GEMVs under quantized_decode
     if cfg.post_block_norm:
         m = L.rmsnorm(lp["post_mlp_norm"], m, cfg.norm_eps)
     return x + m
@@ -788,7 +808,7 @@ def _hybrid_decode_step(params, cache, x, tokens, cfg: ModelConfig):
         a, kc, vc = attn_lib.attention_decode(params["shared_attn"]["attn"], h2, kc, vc, pos, acfg)
         h = h + a
         h2 = L.rmsnorm(params["shared_attn"]["mlp_norm"], h, cfg.norm_eps)
-        h = h + L.mlp(params["shared_attn"]["mlp"], h2)
+        h = h + dispatch.mlp(params["shared_attn"]["mlp"], h2, acfg)
         kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
         vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
         return (h, kc_all, vc_all), gst2

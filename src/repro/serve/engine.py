@@ -55,20 +55,13 @@ class Engine:
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
         batch = {"tokens": jnp.asarray(toks)}
-        logits, cache = M.prefill(self.params, batch, self.cfg, self.max_len)
-        cache["pos"] = jnp.asarray(lens, jnp.int32)
-        # last-token logits per sequence (ragged): re-read via one decode of
-        # the true last token is avoided by gathering during prefill; for
-        # simplicity logits correspond to the longest row — recompute ragged:
-        if len(set(lens)) > 1:
-            logits = self._ragged_last_logits(batch["tokens"], lens)
+        # ragged wave: per-sequence last-token logits are gathered inside the
+        # single prefill pass (M.prefill(seq_lens=...)) — no second forward.
+        seq_lens = jnp.asarray(lens, jnp.int32)
+        logits, cache = M.prefill(self.params, batch, self.cfg, self.max_len,
+                                  seq_lens=seq_lens if len(set(lens)) > 1 else None)
+        cache["pos"] = seq_lens
         return logits, cache
-
-    def _ragged_last_logits(self, tokens, lens):
-        x = M.forward(self.params, {"tokens": tokens}, self.cfg)
-        idx = jnp.asarray([l - 1 for l in lens])
-        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
-        return M.logits_fn(self.params, last, self.cfg)
 
     def _chunked_prefill_state(self, prompts: list[list[int]]):
         """Initialize an empty cache + chunk iterator for LBIM prefill."""

@@ -1,0 +1,1 @@
+"""Test-support utilities (importable without dev dependencies installed)."""

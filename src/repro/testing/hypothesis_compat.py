@@ -1,0 +1,81 @@
+"""``hypothesis`` facade with a deterministic fallback.
+
+The test suite's property tests are written against the real `hypothesis`
+API (``given`` / ``settings`` / ``strategies``). Some environments (this
+container included) cannot install it, so this module re-exports the real
+library when present and otherwise substitutes a miniature deterministic
+sampler covering the subset the suite uses:
+
+* ``strategies.integers(lo, hi)``
+* ``strategies.sampled_from(seq)``
+* ``strategies.lists(elem, min_size=, max_size=)``
+* ``@settings(max_examples=N, deadline=None)``
+* ``@given(**kwargs)``
+
+The fallback draws ``max_examples`` pseudo-random samples from a fixed seed,
+so failures reproduce exactly (no shrinking, no example database — those are
+quality-of-life features, not correctness ones).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                rng = random.Random(0xCD_914)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **draw, **kwargs)
+            # NOT functools.wraps: pytest must see the wrapper's no-parameter
+            # signature, or it would hunt fixtures for the strategy kwargs.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # @settings may be applied above @given: it will tag the wrapper.
+            return wrapper
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.decode_attention.ops import decode_attention_op
 from repro.kernels.decode_attention.ref import decode_attention_ref
