@@ -32,10 +32,12 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run(emit):
+def run(emit, dry_run: bool = False):
     rng = np.random.default_rng(0)
     # --- pim_gemv: d_ff-sized decode GEMV (llama3-8b dims) -----------------
-    n_dim, k_dim, b = 14336, 4096, 8
+    # dry_run: CI smoke shapes — exercises every code path in seconds so the
+    # suite cannot silently rot; timings are meaningless at these sizes.
+    n_dim, k_dim, b = (512, 256, 2) if dry_run else (14336, 4096, 8)
     w = jnp.asarray(rng.integers(-127, 128, (n_dim, k_dim)), jnp.int8)
     x = jnp.asarray(rng.integers(-127, 128, (b, k_dim)), jnp.int8)
     ws = jnp.ones((n_dim,), jnp.float32)
@@ -48,7 +50,7 @@ def run(emit):
          f"tpu_projected_us={t_tpu*1e6:.1f} hbm_bound={bytes_moved/HBM_BW >= 2*b*n_dim*k_dim/PEAK_INT8}")
 
     # --- decode attention with paper K/V mapping vs fixed mapping ----------
-    bsz, hkv, g, hd, lmax = 4, 8, 4, 128, 8192
+    bsz, hkv, g, hd, lmax = (2, 2, 2, 32, 512) if dry_run else (4, 8, 4, 128, 8192)
     q = jnp.asarray(rng.standard_normal((bsz, hkv, g, hd)), jnp.bfloat16)
     for layout in ("cdpim", "row_row"):
         c = init_cache(1, bsz, hkv, hd, lmax, jnp.bfloat16, layout)
@@ -71,7 +73,7 @@ def run(emit):
     # the cache to the live tile count (semantically identical — the skipped
     # tiles are fully masked) and time the oracle; the projected bytes/step
     # come from the kernel's traffic model.
-    bl = 512
+    bl = 128 if dry_run else 512
     dense_bytes = projected_decode_attn_bytes(
         bsz, hkv, hd, lmax, lmax, block_l=bl, dispatched=False)
     c = init_cache(1, bsz, hkv, hd, lmax, jnp.bfloat16, "cdpim")
@@ -95,11 +97,31 @@ def run(emit):
              f"traffic_vs_dense={bytes_step/dense_bytes:.3f}")
 
     # --- W8A8 quantization error audit (paper: no noticeable degradation) --
-    wf = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32) * 0.02
-    xf = jnp.asarray(rng.standard_normal((8, 1024)), jnp.float32)
+    d_q = 256 if dry_run else 1024
+    wf = jnp.asarray(rng.standard_normal((d_q, d_q)), jnp.float32) * 0.02
+    xf = jnp.asarray(rng.standard_normal((8, d_q)), jnp.float32)
     wq, wsc = quantize_ref(wf.T, axis=1)
     xq, xsc = quantize_ref(xf, axis=1)
     y_q = pim_gemv_ref(wq, xq, wsc, xsc)
     y = xf @ wf
     rel = float(jnp.linalg.norm(y_q - y) / jnp.linalg.norm(y))
     emit("kernel/w8a8_rel_error", 0.0, f"rel_err={rel:.4f} (<2% expected)")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny shapes: CI smoke that every path still runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}")
+
+    run(emit, dry_run=args.dry_run)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import ablation_kv, fig4_timeline, fig5, fig6, fig7, kernel_bench, table_overhead
+from benchmarks import (ablation_kv, continuous_batching, fig4_timeline, fig5,
+                        fig6, fig7, kernel_bench, table_overhead)
 
 SUITES = {
     "fig4": fig4_timeline.run,
@@ -18,6 +19,7 @@ SUITES = {
     "overhead": table_overhead.run,
     "kernel": kernel_bench.run,
     "ablation_kv": ablation_kv.run,
+    "continuous": continuous_batching.run,
 }
 
 

@@ -9,7 +9,7 @@ the multi-pod dry-run never allocates real buffers.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
@@ -71,6 +71,11 @@ class ModelConfig:
     quantized_decode: bool = False    # W8A8 PIM-GEMV for decode-time qkv/o/MLP
                                       # projections (paper's INT8 CU path)
     quant_decode_max_batch: int = 8   # largest GEMV batch routed to W8A8
+
+    # --- serving --------------------------------------------------------------
+    eos_id: Optional[int] = None      # end-of-sequence token: a decode slot
+                                      # emitting it retires immediately and
+                                      # frees its lane (continuous batching)
 
     # --- misc -----------------------------------------------------------------
     tie_embeddings: bool = False

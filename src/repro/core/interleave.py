@@ -9,6 +9,15 @@ hide the HBM-bound cache streaming under MXU-bound prefill tiles. The engine
 invokes this for every LBIM step; HBCEM/BLOCKED call the two halves as
 separate programs (the serialization the paper measures against).
 
+The decode half and the prefill half carry INDEPENDENT caches with their own
+batch widths, so the same fused program serves both the historic wave
+handoff and slot-level continuous batching: the decode half is the
+persistent `slots`-lane pool, the prefill half is whatever pending request
+is currently being chunk-loaded into a freed slot (typically batch 1). The
+final chunk of a prompt may be shorter than the admission chunk — chunks are
+never padded, so state-carrying families (ssm/hybrid) stream through the
+same path without corruption.
+
 Both halves use the same weights — the "two Pbanks each" split is a
 scheduling statement, not a weight copy.
 
@@ -21,10 +30,8 @@ program that is exactly the paper's GEMV-class/GEMM-class Pbank split.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M

@@ -9,6 +9,25 @@
 ``Mode.BLOCKED`` is the prior-PIM baseline the paper argues against: the
 processor and PIM never run concurrently, so prefill of the next request
 waits for all decodes (or vice versa).
+
+Continuous-batching semantics (slot-level engine): each engine step may hold
+both *decode work* (active slots) and *prefill work* (a pending request being
+chunk-prefilled into a freed slot). ``plan_step`` resolves what the step
+executes per mode:
+
+* **LBIM**   — decode + prefill chunk in ONE fused XLA program (MACT_LDB /
+  MACB_LDT: half the Pbanks GEMV while the processor streams the other half).
+* **HBCEM**  — decode at full internal bandwidth (PIM_MAC_FM), then the
+  prefill chunk as a SEPARATE program in the same engine step — serialized,
+  never overlapped ("split").
+* **BLOCKED**— admission preempts: the prefill chunk runs alone and every
+  active decode stalls until the pending request is fully loaded (the prior-
+  PIM serialization the paper measures against).
+
+All three produce identical greedy tokens — a slot's decode depends only on
+its own cache lane — so the modes differ purely in schedule, which the
+engine's ``ScheduleEvent`` stream records and ``pimsim.scheduler.
+replay_events`` prices with the calibrated timing model.
 """
 from __future__ import annotations
 
@@ -40,8 +59,17 @@ class StepPlan:
 
 def plan_step(mode: Mode, have_decodes: bool, have_prefills: bool,
               chunk: int) -> StepPlan:
-    if mode is Mode.LBIM and have_decodes and have_prefills:
-        return StepPlan(decode=True, prefill_chunk=chunk, fused=True)
-    if have_decodes and (mode is not Mode.BLOCKED or not have_prefills):
+    """Resolve one continuous-batching engine step for ``mode``.
+
+    ``chunk`` is the number of pending-prefill tokens the step would consume
+    (the admission chunk size, or the full remaining prompt).
+    """
+    if have_decodes and have_prefills:
+        if mode is Mode.LBIM:
+            return StepPlan(decode=True, prefill_chunk=chunk, fused=True)
+        if mode is Mode.HBCEM:
+            return StepPlan(decode=True, prefill_chunk=chunk, fused=False)
+        return StepPlan(decode=False, prefill_chunk=chunk, fused=False)
+    if have_decodes:
         return StepPlan(decode=True, prefill_chunk=0, fused=False)
     return StepPlan(decode=False, prefill_chunk=chunk, fused=False)

@@ -1,7 +1,6 @@
 """Wrapper for the SSD scan kernel with jnp fallback + chunk padding."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ref import ssd_scan_ref

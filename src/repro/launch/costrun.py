@@ -72,8 +72,6 @@ def _reduced_cfgs(cfg, spec):
 def _measure(cfg_variant, arch, shape, mesh):
     """Lower + compile one reduced variant; return flat cost dict."""
     spec = SHAPES[shape]
-    import repro.configs.base as cb
-    # temporarily register variant under its own name lookup bypass:
     fn, args, in_sh, out_sh = dr.build_cell_with_cfg(cfg_variant, shape, mesh)
     with mesh:
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)

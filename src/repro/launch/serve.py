@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a slot the step it emits this token "
+                         "(default: the arch config's eos_id)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -34,7 +37,7 @@ def main() -> None:
     eng = Engine(cfg, params, max_len=args.prompt_len + args.max_new + 8,
                  slots=args.slots, mode=Mode(args.mode), chunk=args.chunk)
     t0 = time.perf_counter()
-    out = eng.generate(prompts, max_new=args.max_new)
+    out = eng.generate(prompts, max_new=args.max_new, eos_id=args.eos_id)
     dt = time.perf_counter() - t0
     toks = sum(len(o) for o in out)
     print(f"mode={args.mode} generated {toks} tokens in {dt:.2f}s "

@@ -500,13 +500,13 @@ def kv_cache_dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.kv_dtype or cfg.dtype)
 
 
-def _windowed_cache_applicable(cfg: ModelConfig) -> bool:
+def windowed_cache_applicable(cfg: ModelConfig) -> bool:
     return (cfg.windowed_kv_cache and cfg.local_global_pattern
             and cfg.sliding_window is not None and cfg.n_layers % 2 == 0)
 
 
 def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> dict:
-    if _windowed_cache_applicable(cfg):
+    if windowed_cache_applicable(cfg):
         # local (even) layers: W-slot ring; global (odd) layers: full length
         n_pairs = cfg.n_layers // 2
         kvd = kv_cache_dtype(cfg)
@@ -543,6 +543,70 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int =
 
 def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
     return jax.eval_shape(lambda: init_decode_cache(cfg, batch, max_len, src_len))
+
+
+# ===========================================================================
+# slot-level cache surgery (continuous batching)
+# ===========================================================================
+#
+# The serving engine holds ONE persistent decode cache of `slots` batch
+# lanes. Every cache leaf except "pos" stacks layers first, so the batch
+# axis is uniformly axis 1: KV leaves (nL, B, ...), recurrent-state leaves
+# (nL, B, ...), audio cross leaves (nL, B, ...). "pos" is the per-lane fill
+# level (B,).
+
+
+def normalize_pos(cache: dict, batch: int) -> dict:
+    """Return ``cache`` with ``pos`` broadcast to a per-lane (B,) vector."""
+    out = dict(cache)
+    out["pos"] = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache["pos"], jnp.int32), (-1,)), (batch,))
+    return out
+
+
+def insert_slot(cache: dict, src_cache: dict, slot: int, src_slot: int = 0) -> dict:
+    """Copy lane ``src_slot`` of ``src_cache`` into lane ``slot`` of ``cache``.
+
+    ``src_cache`` is a freshly prefilled cache (typically batch 1 from a
+    chunked admission prefill, or one lane of a batched cold-start prefill);
+    its KV / recurrent-state lanes and fill level replace whatever the freed
+    slot held. Stale KV beyond the new fill level is left in place — decode
+    attention masks strictly by ``[0, pos)``, so it is unreachable.
+    """
+    out = dict(cache)
+    for key, dst in cache.items():
+        if key == "pos":
+            continue
+        lane = jax.lax.dynamic_slice_in_dim(src_cache[key], src_slot, 1, axis=1)
+        out[key] = jax.lax.dynamic_update_slice_in_dim(
+            dst, lane.astype(dst.dtype), slot, axis=1)
+    src_pos = normalize_pos(src_cache, dst_batch(src_cache))["pos"][src_slot]
+    out["pos"] = normalize_pos(cache, dst_batch(cache))["pos"].at[slot].set(src_pos)
+    return out
+
+
+def reset_slot(cache: dict, slot: int) -> dict:
+    """Retire lane ``slot``: zero its recurrent state and fill level.
+
+    KV lanes are NOT cleared — they are dead weight behind ``pos == 0`` and
+    will be overwritten by the next :func:`insert_slot`. Recurrent state
+    (RWKV wkv / Mamba ssd) has no position masking, so it is zeroed to keep
+    the free lane's dummy decode numerically bounded.
+    """
+    out = dict(cache)
+    for key in ("wkv", "att_tail", "ffn_tail", "ssd", "conv_x", "conv_bc"):
+        if key in cache:
+            lane = jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(cache[key], slot, 1, axis=1))
+            out[key] = jax.lax.dynamic_update_slice_in_dim(cache[key], lane, slot, axis=1)
+    out["pos"] = normalize_pos(cache, dst_batch(cache))["pos"].at[slot].set(0)
+    return out
+
+
+def dst_batch(cache: dict) -> int:
+    """Batch-lane count of a stacked decode cache."""
+    return jax.tree_util.tree_leaves(
+        {k: v for k, v in cache.items() if k != "pos"})[0].shape[1]
 
 
 # ===========================================================================
@@ -626,7 +690,7 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, max_len: int,
     s_total = x.shape[1]
     cache = init_decode_cache(cfg, b, max_len)
     k_new, v_new = kvs  # (nL, B, H, S, hd)
-    if _windowed_cache_applicable(cfg):
+    if windowed_cache_applicable(cfg):
         w = cache["k_loc"].shape[-1]
         # local (even) layers: last W tokens placed at their ring slots
         slots = jnp.arange(w)
@@ -713,7 +777,7 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return logits_fn(params, x, cfg), new_cache
 
-    if _windowed_cache_applicable(cfg):
+    if windowed_cache_applicable(cfg):
         return _windowed_decode_step(params, cache, x, tokens, cfg)
 
     # dense / vlm / moe — cache carried through scan, updated in place

@@ -20,4 +20,10 @@ from repro.pimsim.pim import (  # noqa: F401
     PIPE_PIM,
     PIMDesign,
 )
-from repro.pimsim.scheduler import Trace, blocked_trace, lbim_e2e  # noqa: F401
+from repro.pimsim.scheduler import (  # noqa: F401
+    ReplayReport,
+    Trace,
+    blocked_trace,
+    lbim_e2e,
+    replay_events,
+)

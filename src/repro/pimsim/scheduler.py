@@ -87,6 +87,59 @@ def lbim_e2e(model: LLMSpec, lin: int, lout: int, dev: DeviceSpec, design: PIMDe
     return StageBreakdown(prefill_s=all_prefill_done, decode_s=total - all_prefill_done)
 
 
+@dataclass
+class ReplayReport:
+    """Timing-model price of an engine-produced per-step schedule."""
+    total_s: float
+    decode_busy_s: float
+    prefill_busy_s: float
+    overlap_saved_s: float  # serialized cost minus scheduled cost
+
+    @property
+    def serialized_s(self) -> float:
+        return self.total_s + self.overlap_saved_s
+
+
+def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) -> ReplayReport:
+    """Price a serving engine's ``ScheduleEvent`` stream with the calibrated
+    timing model (the bridge from ``serve.engine.schedule_report()`` to
+    simulated seconds on-device).
+
+    Events are duck-typed: ``e.plan.decode`` / ``e.plan.fused``,
+    ``e.decode_batch``, ``e.decode_ctx`` and ``e.prefill_tokens``. Per step:
+
+    * decode half  — ``pim_decode_step_time`` at the step's live batch and
+      max context; fused (MACT_LDB/MACB_LDT) steps run the CUs on HALF the
+      Pbanks (``lbim=True``).
+    * prefill half — the processor's GEMM over the admission chunk
+      (``gpu_prefill_time``).
+    * fused steps overlap the halves (``max``), with the controller falling
+      back to serialized PIM_MAC_FM whenever overlap would lose — mirroring
+      ``lbim_e2e``'s mode switch; split/blocked steps serialize (``+``).
+    """
+    total = decode_busy = prefill_busy = 0.0
+    for e in events:
+        d_full = d_half = 0.0
+        if e.plan.decode and e.decode_batch > 0:
+            ctx = max(e.decode_ctx, 1)
+            d_full = pim_decode_step_time(model, ctx, dev, design,
+                                          batch=e.decode_batch, lbim=False)
+            if e.plan.fused:
+                d_half = pim_decode_step_time(model, ctx, dev, design,
+                                              batch=e.decode_batch, lbim=True)
+        p = gpu_prefill_time(model, e.prefill_tokens, dev) if e.prefill_tokens else 0.0
+        if e.plan.fused and max(d_half, p) <= d_full + p:
+            step, d = max(d_half, p), d_half
+        else:
+            step, d = d_full + p, d_full
+        total += step
+        decode_busy += d
+        prefill_busy += p
+    return ReplayReport(total_s=total, decode_busy_s=decode_busy,
+                        prefill_busy_s=prefill_busy,
+                        overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0))
+
+
 def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:
     """HBCEM (blocked) timeline for the Fig.4 diagram."""
     tr = Trace()

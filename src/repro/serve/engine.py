@@ -1,24 +1,40 @@
-"""Inference engine: wave-based continuous batching with BLOCKED/HBCEM/LBIM.
+"""Inference engine: slot-level continuous batching with BLOCKED/HBCEM/LBIM.
 
-Requests are served in *waves* of ``slots`` sequences. In BLOCKED and HBCEM
-the engine fully prefills a wave, decodes it to completion, then admits the
-next wave (the paper's blocked execution — HBCEM differs from BLOCKED only
-in where decode runs, which the timing model accounts; tokens are identical).
-In LBIM, while wave *i* decodes, wave *i+1*'s prompt is prefilled chunk by
-chunk inside the SAME fused XLA step (``core.interleave.fused_step``) — the
-MACT_LDB/MACB_LDT overlap. All modes produce identical tokens; the modes
-differ in schedule, which ``schedule_report()`` exposes for the timing model.
+The engine holds ONE persistent decode cache of ``slots`` batch lanes and a
+slot table mapping lanes to requests. Sequences retire mid-flight — per-slot
+``max_new`` budgets and ``eos_id`` free a lane the step it finishes — and the
+head of the pending queue is *chunk-prefilled ahead* into a staging cache,
+then dropped into the next freed lane:
 
-Constraint (documented): within a wave, prompts must share one length for
-state-carrying families (ssm/hybrid — right-padding would corrupt the
-recurrent state); attention families accept ragged prompts via per-sequence
-cache positions.
+* **LBIM**    — the admission chunk is fused into the SAME XLA program as the
+  running decode step (``core.interleave.fused_step``; the paper's
+  MACT_LDB/MACB_LDT Pbank split), so prefill of ANY pending request overlaps
+  with whatever is decoding, every step. The old engine's wave handoff is the
+  special case where the staged request waits for the whole pool to drain.
+* **HBCEM**   — decode runs at full internal bandwidth (PIM_MAC_FM); the
+  admission chunk executes as a separate program in the same engine step.
+* **BLOCKED** — prior-PIM serialization: admission preempts and all decodes
+  stall until the pending request is fully loaded.
+
+All modes emit identical greedy tokens — a slot's decode depends only on its
+own cache lane — so only the schedule differs; ``schedule_report()`` exposes
+it and ``pimsim.scheduler.replay_events`` prices it with the calibrated
+timing model.
+
+Slot mechanics: free lanes keep flowing through the fixed-shape decode batch
+(their garbage argmax is pinned by ``sampling.greedy_masked`` and their fill
+level clamped to 0), a retired lane's KV is left in place behind ``pos == 0``
+(decode attention masks strictly by ``[0, pos)``), and admission writes a
+freshly prefilled batch-1 cache into the lane with ``model.insert_slot``.
+Admission chunks are never padded (the final chunk of a prompt may be short),
+so state-carrying families (ssm/hybrid) stream through the same path — the
+old wave engine's equal-length / chunk-aligned prompt constraints are gone.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,12 +44,46 @@ from repro.core.pim_modes import Mode, StepPlan, plan_step
 from repro.models import model as M
 from repro.serve import sampling
 
+FREE, ACTIVE = "free", "active"
+
 
 @dataclass
 class ScheduleEvent:
     plan: StepPlan
-    decode_batch: int
-    prefill_tokens: int
+    decode_batch: int       # active decode lanes this step
+    prefill_tokens: int     # admission-prefill tokens consumed this step
+    decode_ctx: int = 0     # max context (cache fill) among active lanes
+
+
+@dataclass
+class _Slot:
+    state: str = FREE
+    req: int = -1
+    budget: int = 0         # this request's max_new
+    emitted: int = 0
+    ctx: int = 0            # prompt length + generated tokens in cache
+
+
+@dataclass
+class _Prefill:
+    """One in-flight chunked admission (no lane reserved — it parks when
+    loaded and drops into the next freed slot)."""
+    req: int
+    toks: np.ndarray        # (1, n) full prompt
+    cache: dict             # batch-1 cache being filled chunk by chunk
+    off: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.toks.shape[1] - self.off
+
+
+@dataclass
+class _Ready:
+    """A fully prefilled request parked until a lane frees."""
+    req: int
+    cache: dict
+    first_tok: int
 
 
 @dataclass
@@ -46,127 +96,268 @@ class Engine:
     chunk: int = 8
     events: list = field(default_factory=list)
 
-    def _prefill_wave(self, prompts: list[list[int]]):
-        lens = [len(p) for p in prompts]
-        maxlen = max(lens)
-        if self.cfg.family in ("ssm", "hybrid") and len(set(lens)) > 1:
-            raise ValueError("state-carrying families need equal prompt lengths per wave")
-        toks = np.zeros((len(prompts), maxlen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, : len(p)] = p
-        batch = {"tokens": jnp.asarray(toks)}
-        # ragged wave: per-sequence last-token logits are gathered inside the
-        # single prefill pass (M.prefill(seq_lens=...)) — no second forward.
-        seq_lens = jnp.asarray(lens, jnp.int32)
-        logits, cache = M.prefill(self.params, batch, self.cfg, self.max_len,
-                                  seq_lens=seq_lens if len(set(lens)) > 1 else None)
-        cache["pos"] = seq_lens
-        return logits, cache
+    # ------------------------------------------------------------------ API
 
-    def _chunked_prefill_state(self, prompts: list[list[int]]):
-        """Initialize an empty cache + chunk iterator for LBIM prefill."""
-        lens = [len(p) for p in prompts]
-        if len(set(lens)) > 1:
-            raise ValueError("LBIM wave prompts must share one length")
-        n = lens[0]
-        pad = (-n) % self.chunk
-        if pad and self.cfg.family in ("ssm", "hybrid"):
-            raise ValueError("state-carrying families need chunk-aligned prompts in LBIM")
-        toks = np.zeros((len(prompts), n + pad), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, : len(p)] = p
-        cache = M.init_decode_cache(self.cfg, len(prompts), self.max_len)
-        cache["pos"] = jnp.zeros((len(prompts),), jnp.int32)
-        return jnp.asarray(toks), cache, n
+    def generate(self, prompts: list[list[int]],
+                 max_new: Union[int, Sequence[int]] = 16,
+                 eos_id: Optional[int] = None) -> list[list[int]]:
+        """Serve ``prompts`` through the persistent decode pool.
 
-    def generate(self, prompts: list[list[int]], max_new: int = 16) -> list[list[int]]:
+        ``max_new`` may be a single budget or one per request; ``eos_id``
+        (default ``cfg.eos_id``) retires a slot the step it is emitted (the
+        EOS token is included in the output). Results are index-aligned with
+        ``prompts``.
+        """
+        n = len(prompts)
+        budgets = [max_new] * n if isinstance(max_new, int) else list(max_new)
+        if len(budgets) != n:
+            raise ValueError("one max_new per prompt")
+        eos = eos_id if eos_id is not None else self.cfg.eos_id
+        for p, b in zip(prompts, budgets):
+            if not p or b < 1:
+                raise ValueError("prompts must be non-empty and max_new >= 1")
+            if len(p) + b - 1 > self.max_len:
+                raise ValueError(
+                    f"prompt({len(p)}) + max_new({b}) exceeds max_len={self.max_len}")
+
         self.events.clear()
-        waves = [prompts[i : i + self.slots] for i in range(0, len(prompts), self.slots)]
-        if self.mode is Mode.LBIM and len(waves) > 1:
-            return self._generate_lbim(waves, max_new)
-        out: list[list[int]] = []
-        for wave in waves:
-            logits, cache = self._prefill_wave(wave)
-            self.events.append(ScheduleEvent(plan_step(self.mode, False, True, self.chunk),
-                                             0, sum(len(p) for p in wave)))
-            out.extend(self._decode_wave(logits, cache, len(wave), max_new))
-        return out
+        out: list[list[int]] = [[] for _ in range(n)]
+        table = [_Slot() for _ in range(self.slots)]
+        queue: list[int] = list(range(n))
+        self._cache = M.normalize_pos(
+            M.init_decode_cache(self.cfg, self.slots, self.max_len), self.slots)
+        cur_tok = np.zeros((self.slots,), np.int32)
+        stream: Optional[_Prefill] = None
+        ready: Optional[_Ready] = None
 
-    def _decode_wave(self, logits, cache, nseq, max_new):
-        gen = [[] for _ in range(nseq)]
-        tok = sampling.greedy(logits)
-        for i in range(nseq):
-            gen[i].append(int(tok[i]))
-        for _ in range(max_new - 1):
-            logits, cache = interleave.decode_only_step(
-                self.params, cache, tok[:, None], self.cfg)
-            self.events.append(ScheduleEvent(plan_step(self.mode, True, False, 0), nseq, 0))
-            tok = sampling.greedy(logits)
-            for i in range(nseq):
-                gen[i].append(int(tok[i]))
-        return gen
+        def emit(si: int, tok: int) -> None:
+            """Record one token for slot ``si``; retire the lane when done."""
+            s = table[si]
+            out[s.req].append(tok)
+            s.emitted += 1
+            s.ctx += 1
+            if s.emitted >= s.budget or (eos is not None and tok == eos):
+                s.state = FREE
+                self._cache = M.reset_slot(self._cache, si)
 
-    def _generate_lbim(self, waves, max_new):
-        out = []
-        logits, cache = self._prefill_wave(waves[0])  # cold start
-        self.events.append(ScheduleEvent(plan_step(self.mode, False, True, self.chunk),
-                                         0, sum(len(p) for p in waves[0])))
-        for widx in range(len(waves)):
-            nseq = len(waves[widx])
-            nxt = waves[widx + 1] if widx + 1 < len(waves) else None
-            if nxt is not None:
-                ntoks, ncache, nlen = self._chunked_prefill_state(nxt)
-                nchunks = ntoks.shape[1] // self.chunk
-                ci = 0
-            gen = [[] for _ in range(nseq)]
-            tok = sampling.greedy(logits)
-            for i in range(nseq):
-                gen[i].append(int(tok[i]))
-            nlogits = None
-            for _ in range(max_new - 1):
-                if nxt is not None and ci < nchunks:
-                    chunk_toks = ntoks[:, ci * self.chunk : (ci + 1) * self.chunk]
-                    logits, cache, nlogits, ncache = interleave.fused_step(
-                        self.params, cache, tok[:, None], ncache, chunk_toks, self.cfg)
-                    ci += 1
-                    self.events.append(ScheduleEvent(
-                        plan_step(self.mode, True, True, self.chunk),
-                        nseq, chunk_toks.shape[0] * self.chunk))
+        def place(rdy: _Ready, si: int) -> None:
+            """Drop a fully prefilled request into lane ``si``."""
+            table[si] = _Slot(state=ACTIVE, req=rdy.req, budget=budgets[rdy.req],
+                              ctx=len(prompts[rdy.req]))
+            self._cache = M.insert_slot(self._cache, rdy.cache, si)
+            cur_tok[si] = rdy.first_tok
+            emit(si, rdy.first_tok)
+
+        while queue or stream is not None or ready is not None \
+                or any(s.state == ACTIVE for s in table):
+            # -- a parked request takes the first freed lane
+            if ready is not None:
+                free = [i for i, s in enumerate(table) if s.state == FREE]
+                if free:
+                    place(ready, free[0])
+                    ready = None
+                    continue
+
+            active = [i for i, s in enumerate(table) if s.state == ACTIVE]
+
+            # -- drained pool, nothing staged: batch-prefill straight into lanes
+            if not active and stream is None and queue:
+                cur_tok = self._admit_batch(queue, table, cur_tok, emit,
+                                            budgets, prompts)
+                continue
+
+            # -- stage the next pending request (one admission in flight)
+            if stream is None and ready is None and queue:
+                r = queue.pop(0)
+                if self._solo_prefill_only():
+                    # ring-cache configs: the W-slot ring is a steady-state
+                    # decode structure and cannot ingest multi-token chunks
+                    # (attention_decode_ring is T==1 by construction), so
+                    # admission is one full batch-1 prefill pass — a
+                    # serialization point in every mode, like the old wave
+                    # handoff but per request.
+                    ready = self._prefill_one(r, prompts)
+                    continue
+                stream = _Prefill(
+                    req=r, toks=np.asarray([prompts[r]], np.int32),
+                    cache=M.normalize_pos(
+                        M.init_decode_cache(self.cfg, 1, self.max_len), 1))
+
+            # starvation-aware admission rate: each FREE lane is wasted decode
+            # bandwidth, so the controller lets the processor run a bigger
+            # prefill quantum per step the more lanes sit empty (1x when the
+            # stream merely runs ahead of retirement, up to `slots`x when the
+            # pool is starved). Quanta are whole multiples of `chunk` with at
+            # most one sub-chunk tail per prompt, so the fused/prefill program
+            # shapes — and the jit cache — stay bounded by slots + chunk.
+            c = 0
+            if stream is not None:
+                n_free = sum(1 for s in table if s.state == FREE)
+                if stream.remaining >= self.chunk:
+                    c = self.chunk * min(max(1, n_free),
+                                         stream.remaining // self.chunk)
                 else:
-                    logits, cache = interleave.decode_only_step(
-                        self.params, cache, tok[:, None], self.cfg)
-                    self.events.append(ScheduleEvent(plan_step(self.mode, True, False, 0),
-                                                     nseq, 0))
-                tok = sampling.greedy(logits)
-                for i in range(nseq):
-                    gen[i].append(int(tok[i]))
-            # finish any unprefetched chunks, then hand over to next wave
-            if nxt is not None:
-                while ci < nchunks:
-                    chunk_toks = ntoks[:, ci * self.chunk : (ci + 1) * self.chunk]
-                    nlogits, ncache = interleave.prefill_chunk_step(
-                        self.params, ncache, chunk_toks, self.cfg)
-                    ci += 1
-                    self.events.append(ScheduleEvent(plan_step(self.mode, False, True,
-                                                               self.chunk),
-                                                     0, chunk_toks.shape[0] * self.chunk))
-                ncache["pos"] = jnp.full((len(nxt),), len(nxt[0]), jnp.int32)
-                logits, cache = self._fix_handoff_logits(nlogits, ncache, nxt)
-            out.extend(gen)
+                    c = stream.remaining
+            plan = plan_step(self.mode, bool(active), stream is not None, c)
+            self.events.append(ScheduleEvent(
+                plan, len(active), c if plan.prefill_chunk else 0,
+                max((table[i].ctx for i in active), default=0)))
+
+            pre_logits = None
+            if plan.fused:
+                chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
+                logits, self._cache, pre_logits, stream.cache = interleave.fused_step(
+                    self.params, self._cache, jnp.asarray(cur_tok)[:, None],
+                    stream.cache, chunk_toks, self.cfg)
+                stream.off += c
+            else:
+                if plan.decode:
+                    logits, self._cache = interleave.decode_only_step(
+                        self.params, self._cache, jnp.asarray(cur_tok)[:, None],
+                        self.cfg)
+                if plan.prefill_chunk:
+                    chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
+                    pre_logits, stream.cache = interleave.prefill_chunk_step(
+                        self.params, stream.cache, chunk_toks, self.cfg)
+                    stream.off += c
+
+            if plan.decode:
+                done = np.ones((self.slots,), bool)
+                done[active] = False
+                tok = np.asarray(sampling.greedy_masked(logits, jnp.asarray(done)))
+                cur_tok = tok.astype(np.int32)
+                for si in active:
+                    emit(si, int(tok[si]))
+                # free lanes decode garbage each step; pin their fill level so
+                # the dummy KV write lands at column 0 and never overflows
+                self._cache["pos"] = jnp.where(
+                    jnp.asarray(done), 0, self._cache["pos"])
+
+            if stream is not None and stream.remaining == 0:
+                # chunks are unpadded, so the last chunk's final position IS
+                # the last prompt token — its logits seed the slot's decode.
+                # The loop head places it into the next freed lane.
+                first = int(sampling.greedy(pre_logits[:, -1:, :])[0])
+                ready = _Ready(stream.req, stream.cache, first)
+                stream = None
+
+        cache = self._cache
+        del self._cache
+        self.last_cache = cache  # introspection / tests
         return out
 
-    def _fix_handoff_logits(self, nlogits, ncache, nxt):
-        """Logits of the true last prompt token (pad-corrected)."""
-        nlen = len(nxt[0])
-        off = nlen % self.chunk
-        if off == 0:
-            logits = nlogits[:, -1:, :]
-        else:
-            logits = nlogits[:, off - 1 : off, :]
-        return logits, ncache
+    # ------------------------------------------------------- admission paths
+
+    def _solo_prefill_only(self) -> bool:
+        """Configs whose caches only load correctly via a full batch-1
+        prefill pass: ring-buffer KV (W-slot rings neither chunk-ingest nor
+        tolerate a ragged batch's pad-relative slot placement)."""
+        return M.windowed_cache_applicable(self.cfg)
+
+    def _prefill_one(self, r: int, prompts) -> _Ready:
+        """Full batch-1 prefill of request ``r`` -> a parked ``_Ready``."""
+        toks = np.asarray([prompts[r]], np.int32)
+        logits, pcache = M.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len)
+        pcache["pos"] = jnp.asarray([toks.shape[1]], jnp.int32)
+        self.events.append(ScheduleEvent(
+            plan_step(self.mode, False, True, toks.shape[1]), 0, toks.shape[1]))
+        return _Ready(r, pcache, int(sampling.greedy(logits)[0]))
+
+    def _admit_batch(self, queue, table, cur_tok, emit, budgets, prompts):
+        """Fill every free lane with one full (ragged) prefill pass.
+
+        Used when nothing is decoding — there is no overlap to exploit, so a
+        single batched prefill is strictly better than chunk streaming.
+        State-carrying families (right-padding corrupts recurrent state) and
+        ring-cache configs (ring slots are placed relative to the PADDED
+        batch length) fall back to per-request passes when lengths are ragged.
+        """
+        free = [i for i, s in enumerate(table) if s.state == FREE]
+        take = [queue.pop(0) for _ in range(min(len(free), len(queue)))]
+        lens = [len(prompts[r]) for r in take]
+        needs_solo = (self.cfg.family in ("ssm", "hybrid")
+                      or self._solo_prefill_only())
+        groups = ([[r] for r in take] if needs_solo and len(set(lens)) > 1
+                  else [take])
+        for group in groups:
+            glens = [len(prompts[r]) for r in group]
+            toks = np.zeros((len(group), max(glens)), np.int32)
+            for j, r in enumerate(group):
+                toks[j, : len(prompts[r])] = prompts[r]
+            seq_lens = jnp.asarray(glens, jnp.int32)
+            logits, pcache = M.prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len,
+                seq_lens=seq_lens if len(set(glens)) > 1 else None)
+            pcache["pos"] = seq_lens
+            self.events.append(ScheduleEvent(
+                plan_step(self.mode, False, True, sum(glens)), 0, sum(glens)))
+            first = np.asarray(sampling.greedy(logits))
+            for j, r in enumerate(group):
+                si = free.pop(0)
+                table[si] = _Slot(state=ACTIVE, req=r, budget=budgets[r],
+                                  ctx=glens[j])
+                self._cache = M.insert_slot(self._cache, pcache, si, src_slot=j)
+                cur_tok[si] = int(first[j])
+                emit(si, int(first[j]))
+        return cur_tok
+
+    # ------------------------------------------------------------- reporting
 
     def schedule_report(self):
         fused = sum(1 for e in self.events if e.plan.fused)
-        total = len(self.events)
-        return {"steps": total, "fused_steps": fused,
-                "modes": {e.plan.label for e in self.events}}
+        decode_events = [e for e in self.events if e.plan.decode]
+        return {
+            "steps": len(self.events),
+            "fused_steps": fused,
+            "modes": {e.plan.label for e in self.events},
+            "decode_steps": len(decode_events),
+            "decode_slot_steps": sum(e.decode_batch for e in decode_events),
+            "idle_slot_steps": sum(self.slots - e.decode_batch
+                                   for e in decode_events),
+            "prefill_tokens": sum(e.prefill_tokens for e in self.events),
+        }
+
+
+def wave_baseline_report(prompt_lens: Sequence[int], max_news: Sequence[int],
+                         slots: int) -> dict:
+    """Decode-step accounting of the OLD wave engine for the same request set.
+
+    Waves of ``slots`` requests in submission order; every wave decodes to its
+    batch-max ``max_new`` (first token comes from prefill, so a wave costs
+    ``max(max_new) - 1`` decode steps) and per-request budgets are enforced by
+    truncation only. ``idle_slot_steps`` counts slot-steps that produce no
+    kept token: empty lanes plus lanes decoding past their own budget.
+    """
+    decode_steps = slot_steps = idle = 0
+    reqs = list(zip(prompt_lens, max_news))
+    for w0 in range(0, len(reqs), slots):
+        wave = reqs[w0: w0 + slots]
+        steps_w = max(mn for _, mn in wave) - 1
+        decode_steps += steps_w
+        slot_steps += len(wave) * steps_w
+        idle += (slots - len(wave)) * steps_w
+        idle += sum(steps_w - (mn - 1) for _, mn in wave)
+    return {"decode_steps": decode_steps, "decode_slot_steps": slot_steps,
+            "idle_slot_steps": idle}
+
+
+def wave_baseline_events(prompt_lens: Sequence[int], max_news: Sequence[int],
+                         slots: int, mode: Mode = Mode.HBCEM) -> list:
+    """Synthesize the OLD wave engine's ``ScheduleEvent`` stream so
+    ``pimsim.scheduler.replay_events`` can price the wave schedule against a
+    continuous one. Every wave decodes its FULL width to the batch-max budget
+    — the over-decoded slot-steps are exactly the work continuous batching
+    reclaims by retiring lanes mid-flight.
+    """
+    events = []
+    reqs = list(zip(prompt_lens, max_news))
+    for w0 in range(0, len(reqs), slots):
+        wave = reqs[w0: w0 + slots]
+        ptoks = sum(pl for pl, _ in wave)
+        events.append(ScheduleEvent(plan_step(mode, False, True, ptoks), 0, ptoks))
+        for t in range(max(mn for _, mn in wave) - 1):
+            ctx = max(pl + 1 + t for pl, _ in wave)
+            events.append(ScheduleEvent(plan_step(mode, True, False, 0),
+                                        len(wave), 0, ctx))
+    return events

@@ -10,6 +10,19 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
 
+def greedy_masked(logits: jax.Array, done: jax.Array, pad_id: int = 0) -> jax.Array:
+    """Greedy sampling with per-slot done-masking (continuous batching).
+
+    ``done`` (B,) bool marks retired/free slots: their lanes still flow
+    through the fixed-shape decode batch, but their (garbage) argmax is
+    replaced by ``pad_id`` so retired lanes keep feeding a stable token and
+    never leak into results. Active lanes are untouched — identical to
+    :func:`greedy`, which keeps cross-mode token identity exact.
+    """
+    tok = greedy(logits)
+    return jnp.where(jnp.asarray(done), jnp.int32(pad_id), tok)
+
+
 def sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0,
            top_k: int = 0) -> jax.Array:
     lg = logits[:, -1, :].astype(jnp.float32)

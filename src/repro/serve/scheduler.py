@@ -1,14 +1,20 @@
 """Request-level scheduler: admission queue in front of the Engine.
 
-Maps incoming requests to engine waves by mode policy (the paper's workload
-framing: memory-intensive = short-in/long-out favors HBCEM; compute-
-intensive = long-in/short-out favors LBIM). ``auto`` picks LBIM when the
-queue's aggregate prefill work dominates its decode work — the same
-TTFT-vs-decode trade the paper's Fig. 6/7 sweep demonstrates.
+Maps incoming requests onto the engine's persistent decode pool by mode
+policy (the paper's workload framing: memory-intensive = short-in/long-out
+favors HBCEM; compute-intensive = long-in/short-out favors LBIM). ``auto``
+picks LBIM when the queue's aggregate prefill work dominates its decode work
+— the same TTFT-vs-decode trade the paper's Fig. 6/7 sweep demonstrates.
+
+Admission is incremental: the engine chunk-prefills queued requests into
+lanes as they free, each request decodes exactly to its OWN ``max_new`` (or
+``eos_id``), and results come back per request id — no batch-max padding, no
+truncation of over-decoded tokens.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 from repro.core.pim_modes import Mode
 from repro.serve.engine import Engine
@@ -42,14 +48,20 @@ class Scheduler:
         # compute-intensive queue (TTFT-dominated) -> overlap with LBIM
         return Mode.LBIM if prefill_work >= decode_work else Mode.HBCEM
 
-    def drain(self) -> dict[int, list[int]]:
-        """Serve the whole queue; returns {rid: generated tokens}."""
+    def drain(self, eos_id: Optional[int] = None) -> dict[int, list[int]]:
+        """Serve the whole queue; returns ``{rid: generated tokens}``.
+
+        Every request is admitted with its own ``max_new`` budget — the
+        engine stops that slot's decode the step the budget (or ``eos_id``,
+        defaulting to the model config's) is hit, instead of decoding the
+        whole batch to ``max(max_new)`` and truncating.
+        """
         if not self.queue:
             return {}
-        mode = self._pick_mode()
-        self.engine.mode = mode
+        self.engine.mode = self._pick_mode()
         batch = list(self.queue)
         self.queue.clear()
-        max_new = max(r.max_new for r in batch)
-        outs = self.engine.generate([r.prompt for r in batch], max_new=max_new)
-        return {r.rid: out[: r.max_new] for r, out in zip(batch, outs)}
+        outs = self.engine.generate([r.prompt for r in batch],
+                                    max_new=[r.max_new for r in batch],
+                                    eos_id=eos_id)
+        return {r.rid: out for r, out in zip(batch, outs)}

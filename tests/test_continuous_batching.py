@@ -1,0 +1,179 @@
+"""Slot-level continuous batching: identity, retirement, and schedule wins.
+
+Acceptance criteria of the continuous-batching PR:
+* for a mixed-length / mixed-``max_new`` request set, BLOCKED / HBCEM / LBIM
+  all emit greedy tokens identical to a one-request-at-a-time reference
+  (a direct ``M.prefill`` + ``M.decode_step`` loop — no engine code);
+* per-request ``max_new`` actually stops that slot's decode;
+* ``eos_id`` retires a slot mid-flight and frees it for the queue;
+* with ragged ``max_new``, total decode steps AND idle slot-steps are
+  strictly below the wave-based schedule for the same request set;
+* the timing-model replay prices the LBIM schedule no worse than BLOCKED.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim_modes import Mode
+from repro.models import model as M
+from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
+from repro.serve import sampling
+from repro.serve.engine import (Engine, wave_baseline_events,
+                                wave_baseline_report)
+
+MAX_LEN = 64
+PROMPTS = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9], [2, 4, 6, 8, 1]]
+BUDGETS = [2, 7, 3, 5, 1]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def ref_generate(cfg, params, prompt, max_new, eos=None):
+    """One-request-at-a-time reference: raw prefill + decode loop."""
+    logits, cache = M.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg, MAX_LEN)
+    cache["pos"] = jnp.asarray([len(prompt)], jnp.int32)
+    tok = int(sampling.greedy(logits)[0])
+    outs = [tok]
+    while len(outs) < max_new and (eos is None or tok != eos):
+        logits, cache = M.decode_step(
+            params, cache, jnp.asarray([[tok]], jnp.int32), cfg)
+        tok = int(sampling.greedy(logits)[0])
+        outs.append(tok)
+    return outs
+
+
+@pytest.fixture(scope="module")
+def reference(setup):
+    cfg, params = setup
+    return [ref_generate(cfg, params, p, b) for p, b in zip(PROMPTS, BUDGETS)]
+
+
+@pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
+def test_cross_mode_identity_ragged_budgets(setup, reference, mode):
+    cfg, params = setup
+    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
+    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    assert out == reference
+
+
+def test_per_request_max_new_stops_slot(setup):
+    """No slot decodes past its own budget: kept tokens == decoded slot-steps
+    (plus the prefill-seeded first token per request)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.HBCEM, chunk=4)
+    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    assert [len(o) for o in out] == BUDGETS
+    rep = eng.schedule_report()
+    decoded_tokens = sum(b - 1 for b in BUDGETS)  # first token is prefill's
+    assert rep["decode_slot_steps"] == decoded_tokens
+
+
+def test_schedule_beats_wave_baseline(setup):
+    """The acceptance inequality: ragged max_new -> strictly fewer decode
+    steps AND strictly fewer idle slot-steps than the wave schedule."""
+    cfg, params = setup
+    lens = [len(p) for p in PROMPTS]
+    wave = wave_baseline_report(lens, BUDGETS, slots=2)
+    wave_sim = replay_events(wave_baseline_events(lens, BUDGETS, slots=2),
+                             LLAMA_1B, JETSON, CDPIM)
+    for mode in (Mode.HBCEM, Mode.LBIM):
+        eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
+        eng.generate(PROMPTS, max_new=BUDGETS)
+        rep = eng.schedule_report()
+        assert rep["decode_steps"] < wave["decode_steps"]
+        assert rep["idle_slot_steps"] < wave["idle_slot_steps"]
+        # mid-flight retirement reclaims every over-decoded slot-step, so the
+        # calibrated timing model prices the slot schedule's PIM decode time
+        # strictly cheaper on-device (total time additionally trades chunked
+        # admission's weight re-streaming against overlap — workload-scale
+        # dependent, demonstrated in benchmarks/continuous_batching.py)
+        assert rep["decode_slot_steps"] < wave["decode_slot_steps"]
+        sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
+        assert sim.decode_busy_s < wave_sim.decode_busy_s
+
+
+def test_lbim_fuses_midflight_admission(setup):
+    """Refilling a freed slot overlaps its prefill with the RUNNING decode —
+    not with a staged next wave: fused MACT_LDB steps appear even though the
+    pool never fully drains."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
+    eng.generate(PROMPTS, max_new=BUDGETS)
+    rep = eng.schedule_report()
+    assert rep["fused_steps"] > 0
+    assert "MACT_LDB" in rep["modes"]
+
+
+def test_eos_retires_slot_and_matches_reference(setup, reference):
+    cfg, params = setup
+    eos = reference[1][3]  # a token the reference emits mid-stream
+    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
+    out = eng.generate(PROMPTS, max_new=BUDGETS, eos_id=eos)
+    for i, (p, b) in enumerate(zip(PROMPTS, BUDGETS)):
+        assert out[i] == ref_generate(cfg, params, p, b, eos=eos)
+        assert eos not in out[i][:-1]  # retired at FIRST eos
+
+
+def test_eos_from_config(setup, reference):
+    cfg, params = setup
+    eos = reference[1][3]
+    eng = Engine(cfg.replace(eos_id=eos), params, max_len=MAX_LEN, slots=2,
+                 mode=Mode.HBCEM, chunk=4)
+    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    assert out[1] == ref_generate(cfg, params, PROMPTS[1], BUDGETS[1], eos=eos)
+
+
+def test_replay_prices_lbim_no_worse_than_blocked(setup):
+    cfg, params = setup
+    totals = {}
+    for mode in (Mode.BLOCKED, Mode.LBIM):
+        eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
+        eng.generate(PROMPTS, max_new=BUDGETS)
+        totals[mode] = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
+    assert totals[Mode.LBIM].total_s <= totals[Mode.BLOCKED].total_s + 1e-9
+    assert totals[Mode.LBIM].overlap_saved_s >= 0.0
+    assert totals[Mode.LBIM].decode_busy_s > 0
+    assert totals[Mode.LBIM].prefill_busy_s > 0
+
+
+@pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
+def test_ring_cache_continuous_matches_single(mode):
+    """Ring-buffer KV (windowed_kv_cache) regression: the W-slot ring cannot
+    chunk-ingest (T==1 by construction) nor join a ragged batched prefill
+    (slots are placed relative to the padded length), so admission must go
+    through full batch-1 prefills — and still match single-request decode."""
+    cfg = get_config("gemma2-27b", smoke=True).replace(
+        windowed_kv_cache=True, sliding_window=4)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [2, 3], [9, 8, 7, 6, 5, 4, 3, 2, 1]]
+    budgets = [3, 4, 2]
+    eng = Engine(cfg, params, max_len=32, slots=2, mode=mode, chunk=2)
+    out = eng.generate(prompts, max_new=budgets)
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        single = Engine(cfg, params, max_len=32, slots=1,
+                        mode=Mode.HBCEM).generate([p], max_new=b)[0]
+        assert single == out[i], (mode, i)
+
+
+def test_slot_helpers_roundtrip(setup):
+    """insert_slot/reset_slot: lane surgery is exact and lane-local."""
+    cfg, params = setup
+    pool = M.normalize_pos(M.init_decode_cache(cfg, 3, MAX_LEN), 3)
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    _, one = M.prefill(params, {"tokens": toks}, cfg, MAX_LEN)
+    one["pos"] = jnp.asarray([4], jnp.int32)
+    pool2 = M.insert_slot(pool, one, slot=1)
+    assert int(pool2["pos"][1]) == 4 and int(pool2["pos"][0]) == 0
+    assert jnp.allclose(pool2["k"][:, 1], one["k"][:, 0])
+    assert jnp.allclose(pool2["k"][:, 0], pool["k"][:, 0])  # other lanes untouched
+    pool3 = M.reset_slot(pool2, 1)
+    assert int(pool3["pos"][1]) == 0
+    # KV intentionally left behind pos==0 (masked dead weight)
+    assert jnp.allclose(pool3["k"][:, 1], pool2["k"][:, 1])

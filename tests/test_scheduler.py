@@ -1,0 +1,108 @@
+"""Scheduler mode policy + schedule_report accounting (previously untested)."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim_modes import Mode, plan_step
+from repro.models import model as M
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _sched(cfg, params, **kw):
+    return Scheduler(Engine(cfg, params, max_len=64, slots=2, chunk=4), **kw)
+
+
+def test_auto_picks_lbim_for_prefill_heavy_queue(setup):
+    cfg, params = setup
+    s = _sched(cfg, params)
+    for _ in range(3):
+        s.submit([1] * 12, max_new=2)  # long-in / short-out: compute-intensive
+    assert s._pick_mode() is Mode.LBIM
+
+
+def test_auto_picks_hbcem_for_decode_heavy_queue(setup):
+    cfg, params = setup
+    s = _sched(cfg, params)
+    for _ in range(3):
+        s.submit([1, 2], max_new=12)  # short-in / long-out: memory-intensive
+    assert s._pick_mode() is Mode.HBCEM
+
+
+def test_explicit_mode_policy_overrides_queue_shape(setup):
+    cfg, params = setup
+    s = _sched(cfg, params, mode_policy="blocked")
+    s.submit([1] * 12, max_new=2)
+    assert s._pick_mode() is Mode.BLOCKED
+
+
+def test_drain_honors_per_request_max_new(setup):
+    """The old drain decoded every request to max(max_new) then truncated;
+    now each slot stops at its own budget — kept tokens == decoded tokens."""
+    cfg, params = setup
+    s = _sched(cfg, params, mode_policy="hbcem")
+    budgets = {s.submit([1, 2, 3], max_new=mn): mn for mn in (1, 6, 2, 4)}
+    res = s.drain()
+    assert {rid: len(toks) for rid, toks in res.items()} == budgets
+    rep = s.engine.schedule_report()
+    assert rep["decode_slot_steps"] == sum(mn - 1 for mn in budgets.values())
+
+
+def test_drain_clears_queue_and_empty_drain(setup):
+    cfg, params = setup
+    s = _sched(cfg, params)
+    assert s.drain() == {}
+    s.submit([1, 2], max_new=2)
+    s.drain()
+    assert s.queue == [] and s.drain() == {}
+
+
+def test_drain_passes_eos_to_engine(setup):
+    cfg, params = setup
+    s = _sched(cfg, params, mode_policy="hbcem")
+    rid = s.submit([1, 2, 3], max_new=8)
+    ref = s.drain()[rid]
+    eos = ref[2]
+    rid2 = s.submit([1, 2, 3], max_new=8)
+    out = s.drain(eos_id=eos)[rid2]
+    assert out == ref[: ref.index(eos) + 1]
+
+
+def test_schedule_report_fused_step_counting(setup):
+    """LBIM fuses EXACTLY the admission chunks that overlap live decodes:
+    every fused event carries both decode lanes and prefill tokens, and the
+    fused count equals the MACT_LDB events in the stream."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_len=64, slots=2, mode=Mode.LBIM, chunk=4)
+    eng.generate([[1, 2, 3, 4]] * 4, max_new=6)
+    rep = eng.schedule_report()
+    fused_events = [e for e in eng.events if e.plan.fused]
+    assert rep["fused_steps"] == len(fused_events) > 0
+    for e in fused_events:
+        assert e.plan.label == "MACT_LDB"
+        assert e.decode_batch > 0 and e.prefill_tokens > 0
+    # steps bookkeeping is consistent
+    assert rep["steps"] == len(eng.events)
+    assert rep["prefill_tokens"] == sum(len(p) for p in [[1, 2, 3, 4]] * 4)
+
+
+def test_plan_step_continuous_semantics():
+    """HBCEM serializes the admission chunk in the same step (split); BLOCKED
+    stalls decode; LBIM fuses; decode-only is PIM_MAC_FM for all modes."""
+    both = dict(have_decodes=True, have_prefills=True, chunk=8)
+    assert plan_step(Mode.LBIM, **both).fused
+    hb = plan_step(Mode.HBCEM, **both)
+    assert hb.decode and hb.prefill_chunk == 8 and not hb.fused
+    assert hb.label == "split"
+    bl = plan_step(Mode.BLOCKED, **both)
+    assert not bl.decode and bl.prefill_chunk == 8
+    for m in Mode:
+        assert plan_step(m, True, False, 8).label == "PIM_MAC_FM"
+        assert plan_step(m, False, True, 8).label == "LOAD"

@@ -61,9 +61,28 @@ def test_plan_step_policy():
         not plan_step(Mode.BLOCKED, True, True, 8).decode
 
 
-def test_state_family_rejects_ragged():
+def test_state_family_serves_ragged_prompts():
+    """The wave engine rejected ragged prompts for state-carrying families
+    (right-padding corrupts recurrent state); slot-level admission prefills
+    per request, so ragged ssm waves now serve and match single-sequence."""
     cfg = get_config("rwkv6-1.6b", smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_len=32, slots=2, mode=Mode.HBCEM)
+    prompts = [[1, 2, 3], [1, 2], [4, 4, 4, 4]]
+    eng = Engine(cfg, params, max_len=32, slots=2, mode=Mode.LBIM, chunk=2)
+    batched = eng.generate(prompts, max_new=2)
+    for i, p in enumerate(prompts):
+        single = Engine(cfg, params, max_len=32, slots=1,
+                        mode=Mode.HBCEM).generate([p], max_new=2)[0]
+        assert single == batched[i]
+
+
+def test_engine_rejects_overflow_and_empty():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=8, slots=1)
     with pytest.raises(ValueError):
-        eng.generate([[1, 2, 3], [1, 2]], max_new=2)
+        eng.generate([[1, 2, 3, 4]], max_new=6)  # 4 + 6 - 1 > 8
+    with pytest.raises(ValueError):
+        eng.generate([[]], max_new=2)
+    with pytest.raises(ValueError):
+        eng.generate([[1], [2]], max_new=[3])  # budget list mismatch

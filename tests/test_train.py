@@ -1,5 +1,4 @@
 """Training substrate: loop, fault tolerance, checkpoint quarantine, accum."""
-import json
 import os
 
 import jax
