@@ -1,14 +1,18 @@
 """Slot-level continuous batching vs the wave schedule (the tentpole win).
 
-For a ragged request set (mixed prompt lengths, mixed per-request max_new)
+For a ragged request set (mixed prompt lengths, mixed per-request budgets)
 the persistent decode pool retires finished sequences mid-flight and refills
 their lanes by chunk-prefilling the queue, so total decode steps and idle
 slot-steps drop below the wave engine's batch-max schedule. Emits both the
 step accounting and the calibrated timing model's price of each schedule
-(``pimsim.scheduler.replay_events``).
+(``pimsim.scheduler.replay_events``), and writes the whole comparison to
+``BENCH_serving.json`` so the serving perf trajectory is machine-readable
+across PRs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -18,8 +22,13 @@ from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
 from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
-from repro.serve.engine import (Engine, wave_baseline_events,
-                                wave_baseline_report)
+from repro.serve.api import GenerationRequest
+from repro.serve.engine import wave_baseline_events, wave_baseline_report
+from repro.serve.serving_model import ServingModel
+
+# anchored to the repo root (not cwd): this file is the committed cross-PR
+# perf baseline, so it must land in exactly one place
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
 
 def run(emit, dry_run: bool = False):
@@ -42,12 +51,24 @@ def run(emit, dry_run: bool = False):
          f"decode_slot_steps={wave['decode_slot_steps']} "
          f"idle_slot_steps={wave['idle_slot_steps']} "
          f"sim_ms={wave_sim.total_s*1e3:.2f}")
+    bench = {
+        "arch": cfg.name,
+        "requests": n_req,
+        "slots": slots,
+        "prompt_lens": lens,
+        "budgets": budgets,
+        "wave_baseline": {**wave, "sim": wave_sim.to_json()},
+        "modes": {},
+    }
 
+    sm = ServingModel.prepare(cfg, params, max_len=32, slots=slots)
     outs = {}
     for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
-        eng = Engine(cfg, params, max_len=32, slots=slots, mode=mode, chunk=4)
+        eng = sm.engine(mode=mode, chunk=4)
+        reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
         t0 = time.perf_counter()
-        outs[mode] = eng.generate(prompts, max_new=budgets)
+        outs[mode] = [r.tokens for r in eng.serve(reqs)]
         wall = time.perf_counter() - t0
         rep = eng.schedule_report()
         sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
@@ -57,8 +78,21 @@ def run(emit, dry_run: bool = False):
              f"idle_slot_steps={rep['idle_slot_steps']} "
              f"sim_ms={sim.total_s*1e3:.2f} "
              f"overlap_saved_ms={sim.overlap_saved_s*1e3:.2f}")
+        bench["modes"][mode.value] = {
+            "wall_s": wall,
+            "schedule": rep.to_json(),
+            "sim": sim.to_json(),
+        }
         assert rep["decode_steps"] <= wave["decode_steps"], "schedule regressed"
         assert rep["decode_slot_steps"] < wave["decode_slot_steps"], \
             "continuous batching must reclaim over-decoded slot-steps"
     assert outs[Mode.BLOCKED] == outs[Mode.HBCEM] == outs[Mode.LBIM], \
         "cross-mode token identity violated"
+
+    if dry_run:
+        # CI smoke runs at reduced scale — never overwrite the committed
+        # full-scale trajectory with smoke numbers
+        emit("continuous/bench_json", 0.0, "dry-run: BENCH_serving.json not written")
+        return
+    BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
+    emit("continuous/bench_json", 0.0, f"wrote {BENCH_JSON}")

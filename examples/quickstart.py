@@ -22,16 +22,19 @@ print(f"[pimsim] LLaMA-1B (128->2048) Jetson: GPU {g.total:.1f}s (paper 35.7) "
 from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
-from repro.serve.engine import Engine
+from repro.serve.api import GenerationRequest
+from repro.serve.serving_model import ServingModel
 
 cfg = get_config("llama3-8b", smoke=True)
 params = M.init_params(jax.random.PRNGKey(0), cfg)
+sm = ServingModel.prepare(cfg, params, max_len=48, slots=4)  # load once
 prompts = [[1, 2, 3, 4, 5, 6, 7, 8]] * 4 + [[9, 8, 7, 6, 5, 4, 3, 2]] * 4
+reqs = [GenerationRequest(prompt=p, max_new_tokens=6) for p in prompts]
 for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
-    eng = Engine(cfg, params, max_len=48, slots=4, mode=mode, chunk=4)
-    out = eng.generate(prompts, max_new=6)
-    print(f"[serve] {mode.value:8s} first-request tokens: {out[0]} "
-          f"schedule={eng.schedule_report()}")
+    eng = sm.engine(mode=mode, chunk=4)  # cheap view over the artifact
+    out = eng.serve(reqs)
+    print(f"[serve] {mode.value:8s} first-request tokens: {out[0].tokens} "
+          f"schedule={eng.schedule_report().to_json()}")
 
 # --- 3. the CU kernel vs its oracle ----------------------------------------
 from repro.kernels.pim_gemv.ops import pim_gemv_int8

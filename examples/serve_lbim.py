@@ -2,6 +2,11 @@
 under BLOCKED vs HBCEM vs LBIM, with the schedule trace, the wave-engine
 baseline it beats, and the calibrated timing model's price for each schedule.
 
+The model is prepared ONCE (``ServingModel.prepare`` — backend pinned, cache
+layout fixed) and each mode gets a cheap engine view over the same artifact;
+requests are per-request ``GenerationRequest`` objects with their own
+budgets.
+
 Run:  PYTHONPATH=src python examples/serve_lbim.py [--arch olmoe-1b-7b]
 """
 import argparse
@@ -15,8 +20,9 @@ from repro.core.pim_modes import Mode
 from repro.models import model as M
 from repro.pimsim import (CDPIM, JETSON, LLAMA_1B, hbcem_e2e, lbim_e2e,
                           replay_events)
-from repro.serve.engine import (Engine, wave_baseline_events,
-                                wave_baseline_report)
+from repro.serve.api import GenerationRequest
+from repro.serve.engine import wave_baseline_events, wave_baseline_report
+from repro.serve.serving_model import ServingModel
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="llama3-8b")
@@ -29,15 +35,18 @@ rng = np.random.default_rng(0)
 # ragged everything: mixed prompt lengths AND bimodal per-request budgets —
 # the workload waves are worst at: every short request strands its slot
 # until the wave's longest finisher, unless retirement frees it mid-flight
-prompts = [list(map(int, rng.integers(1, cfg.vocab_size, int(rng.integers(4, 12)))))
-           for _ in range(args.requests)]
-budgets = [int(rng.choice([2, 3, 14, 15])) for _ in range(args.requests)]
+reqs = [GenerationRequest(
+            prompt=list(map(int, rng.integers(1, cfg.vocab_size,
+                                              int(rng.integers(4, 12))))),
+            max_new_tokens=int(rng.choice([2, 3, 14, 15])))
+        for _ in range(args.requests)]
 
+sm = ServingModel.prepare(cfg, params, max_len=48, slots=4)
 outs = {}
 for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
-    eng = Engine(cfg, params, max_len=48, slots=4, mode=mode, chunk=4)
+    eng = sm.engine(mode=mode, chunk=4)
     t0 = time.perf_counter()
-    outs[mode] = eng.generate(prompts, max_new=budgets)
+    outs[mode] = [r.tokens for r in eng.serve(reqs)]
     rep = eng.schedule_report()
     sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
     print(f"{mode.value:8s}: {time.perf_counter()-t0:5.2f}s wall, "
@@ -48,7 +57,8 @@ for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
 assert outs[Mode.BLOCKED] == outs[Mode.HBCEM] == outs[Mode.LBIM], \
     "modes must agree on tokens"
 
-lens = [len(p) for p in prompts]
+lens = [len(r.prompt) for r in reqs]
+budgets = [r.max_new_tokens for r in reqs]
 wave = wave_baseline_report(lens, budgets, slots=4)
 wave_sim = replay_events(wave_baseline_events(lens, budgets, slots=4),
                          LLAMA_1B, JETSON, CDPIM)

@@ -29,8 +29,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import PreparedLinear, raw_weight
 from repro.kernels.decode_attention.ops import decode_attention_op
-from repro.kernels.pim_gemv.ops import linear_w8a8
+from repro.kernels.pim_gemv.ops import linear_w8a8, linear_w8a8_prequant
 
 _KERNEL_BACKENDS = ("pallas", "interpret")
 BACKENDS = ("auto", "pallas", "interpret", "reference", "dense")
@@ -86,27 +87,37 @@ def _gemv_shaped(cfg, x: jax.Array) -> bool:
             and x.shape[0] <= cfg.quant_decode_max_batch)
 
 
-def linear(w: jax.Array, x: jax.Array, cfg) -> jax.Array:
+def linear(w, x: jax.Array, cfg) -> jax.Array:
     """``x @ w`` with the W8A8 PIM-GEMV path at quantized-decode GEMV shapes.
 
-    w: (K, N) float (the repo's row-major weight convention); x: (..., K).
+    ``w`` is either a raw (K, N) float array (the repo's row-major weight
+    convention) or a :class:`repro.core.quant.PreparedLinear` built at load
+    time by ``ServingModel.prepare``; ``x``: (..., K).
 
-    NOTE: weights are quantized on the fly (transpose + per-channel scale per
-    step), which is accuracy-faithful but re-reads the float weights each
-    step — fine for validating the INT8 datapath on CPU/interpret, wrong for
-    production bandwidth. The deployment-shaped follow-up is pre-quantizing
-    the param tree once at load and feeding ``pim_gemv_int8`` directly.
+    Prepared leaves feed ``pim_gemv_int8`` their held weight-stationary int8
+    image — only the activation is quantized per step, the deployment-shaped
+    path (the paper's weight-stationary banks). Raw leaves quantize the
+    weight on the fly (transpose + per-channel scale per step) — the
+    accuracy-faithful FALLBACK that re-reads float weights every step, kept
+    for ad-hoc engines constructed without a prepared artifact; both paths
+    are token-identical (same quantizer, same operands).
     """
     if not _gemv_shaped(cfg, x):
-        return x @ w
+        return x @ raw_weight(w)
     b, t, k = x.shape
     backend = resolve_backend(cfg)
-    y = linear_w8a8(
-        jnp.swapaxes(w, -1, -2),            # weight-stationary (N, K)
-        x.reshape(b * t, k),
-        interpret=(backend == "interpret"),
-        use_kernel=(backend in _KERNEL_BACKENDS),
-    )
+    interpret = backend == "interpret"
+    use_kernel = backend in _KERNEL_BACKENDS
+    if isinstance(w, PreparedLinear):
+        y = linear_w8a8_prequant(w.w_q, w.w_scale, x.reshape(b * t, k),
+                                 interpret=interpret, use_kernel=use_kernel)
+    else:
+        y = linear_w8a8(
+            jnp.swapaxes(w, -1, -2),        # weight-stationary (N, K)
+            x.reshape(b * t, k),
+            interpret=interpret,
+            use_kernel=use_kernel,
+        )
     return y.reshape(b, t, -1).astype(x.dtype)
 
 

@@ -46,5 +46,18 @@ def linear_w8a8(w: jax.Array, x: jax.Array, *, interpret: bool = False,
     w: (N, K) float; x: (B, K) float → (B, N) float32.
     """
     w_q, w_s = quantize_ref(w, axis=1)
+    return linear_w8a8_prequant(w_q, w_s, x, interpret=interpret, use_kernel=use_kernel)
+
+
+def linear_w8a8_prequant(w_q: jax.Array, w_scale: jax.Array, x: jax.Array, *,
+                         interpret: bool = False, use_kernel: bool = True) -> jax.Array:
+    """W8A8 linear against a weight quantized ONCE at load time.
+
+    The serving deployment path (weight-stationary banks): only the
+    activation is quantized per step. w_q: (N, K) int8; w_scale: (N,) f32;
+    x: (B, K) float → (B, N) float32. Token-identical to :func:`linear_w8a8`
+    on the same float weight because both use the same symmetric per-channel
+    quantizer.
+    """
     x_q, x_s = quantize_ref(x, axis=1)
-    return pim_gemv_int8(w_q, x_q, w_s, x_s, interpret=interpret, use_kernel=use_kernel)
+    return pim_gemv_int8(w_q, x_q, w_scale, x_s, interpret=interpret, use_kernel=use_kernel)

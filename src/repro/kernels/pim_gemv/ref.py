@@ -16,8 +16,16 @@ def pim_gemv_ref(w: jnp.ndarray, x: jnp.ndarray, w_scale: jnp.ndarray,
 
 
 def quantize_ref(a: jnp.ndarray, axis: int = -1):
-    """Symmetric per-row int8 quantization: returns (q_int8, scale_f32)."""
+    """Symmetric per-row int8 quantization: returns (q_int8, scale_f32).
+
+    The scale uses an explicit reciprocal MULTIPLY rather than ``amax / 127``:
+    XLA rewrites division-by-constant inside jitted programs (1-ulp scale
+    drift vs the eager computation), which would break the bitwise identity
+    between load-time quantization (eager, ``ServingModel.prepare``) and
+    on-the-fly quantization (in-graph, the fallback decode path). A plain
+    multiply lowers identically in both contexts.
+    """
     amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.maximum(amax, 1e-8) * jnp.float32(1.0 / 127.0)
     q = jnp.clip(jnp.round(a.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return q, jnp.squeeze(scale, axis)

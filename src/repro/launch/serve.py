@@ -1,5 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch llama3-8b --smoke
---mode lbim`` — batched generation through the CD-PIM-mode engine."""
+--mode lbim`` — request-level generation through the CD-PIM-mode engine.
+
+The model is prepared ONCE (``ServingModel.prepare``: backend pinned, W8A8
+weights pre-quantized under ``--quantized-decode``, cache layout fixed), then
+every request rides its own ``GenerationRequest`` — budget, eos, sampling
+(``--temperature/--top-k/--top-p/--seed``) and, with ``--stream``, a
+streaming callback printing tokens as they emit.
+"""
 from __future__ import annotations
 
 import argparse
@@ -11,7 +18,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
-from repro.serve.engine import Engine
+from repro.serve.api import GenerationRequest, SamplingParams
+from repro.serve.serving_model import ServingModel
 
 
 def main() -> None:
@@ -27,23 +35,53 @@ def main() -> None:
     ap.add_argument("--eos-id", type=int, default=None,
                     help="retire a slot the step it emits this token "
                          "(default: the arch config's eos_id)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (exact argmax); >0 samples")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus cutoff in (0, 1] (1 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed of each request's private RNG lane "
+                         "(request i uses seed + i)")
+    ap.add_argument("--quantized-decode", action="store_true",
+                    help="route decode projections through the pre-quantized "
+                         "W8A8 PIM-GEMV path (quantized at load)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token the step it is emitted")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.quantized_decode:
+        cfg = cfg.replace(quantized_decode=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sm = ServingModel.prepare(cfg, params, slots=args.slots,
+                              max_len=args.prompt_len + args.max_new + 8)
+    print(f"prepared {cfg.name}: backend={sm.backend} "
+          f"prequantized={sm.prequantized}")
+
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size, args.prompt_len))
-               for _ in range(args.requests)]
-    eng = Engine(cfg, params, max_len=args.prompt_len + args.max_new + 8,
-                 slots=args.slots, mode=Mode(args.mode), chunk=args.chunk)
+    reqs = []
+    for i in range(args.requests):
+        prompt = list(map(int, rng.integers(1, cfg.vocab_size, args.prompt_len)))
+        on_token = (lambda t, i=i: print(f"  [stream] req{i} -> {t}",
+                                         flush=True)) if args.stream else None
+        reqs.append(GenerationRequest(
+            prompt=prompt, max_new_tokens=args.max_new, eos_id=args.eos_id,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.seed + i),
+            on_token=on_token))
+
+    eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk)
     t0 = time.perf_counter()
-    out = eng.generate(prompts, max_new=args.max_new, eos_id=args.eos_id)
+    results = eng.serve(reqs)
     dt = time.perf_counter() - t0
-    toks = sum(len(o) for o in out)
+    toks = sum(len(r.tokens) for r in results)
     print(f"mode={args.mode} generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s) schedule={eng.schedule_report()}")
-    for i, o in enumerate(out[:3]):
-        print(f"  req{i}: {o}")
+          f"({toks/dt:.1f} tok/s) schedule={eng.schedule_report().to_json()}")
+    for i, r in enumerate(results[:3]):
+        print(f"  req{i} ({r.finish_reason}): {r.tokens}")
 
 
 if __name__ == "__main__":

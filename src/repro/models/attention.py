@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import dispatch, kv_mapping
+from repro.core.quant import raw_weight
 from repro.models.layers import apply_rope, dense_init, softcap
 
 NEG_INF = -2.3819763e38  # bf16-safe large negative
@@ -75,8 +76,10 @@ def _scale(cfg: ModelConfig) -> float:
     return cfg.head_dim ** -0.5
 
 
-def _dense_matmul(w: jax.Array, x: jax.Array) -> jax.Array:
-    return x @ w
+def _dense_matmul(w, x: jax.Array) -> jax.Array:
+    # raw_weight: multi-token (GEMM-shaped) ops on a ServingModel's prepared
+    # tree take the float operand — int8 buys nothing at MXU-bound shapes
+    return x @ raw_weight(w)
 
 
 def _decode_linear(cfg: ModelConfig):
@@ -167,7 +170,7 @@ def attention_cross(
     """Cross-attention against fixed encoder memory K/V (B, Hkv, S, hd)."""
     b, t, d = x.shape
     hd = cfg.head_dim
-    q = (x @ p["wq"])
+    q = (x @ raw_weight(p["wq"]))
     if cfg.qkv_bias:
         q = q + p["bq"]
     q = q.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
@@ -178,7 +181,7 @@ def attention_cross(
     pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     y = jnp.einsum("bkgts,bksd->bkgtd", pr, v)
     y = y.reshape(b, cfg.n_heads, t, hd).transpose(0, 2, 1, 3).reshape(b, t, -1)
-    return y @ p["wo"]
+    return y @ raw_weight(p["wo"])
 
 
 def project_memory_kv(p: dict, mem: jax.Array, cfg: ModelConfig):

@@ -99,6 +99,16 @@ class ReplayReport:
     def serialized_s(self) -> float:
         return self.total_s + self.overlap_saved_s
 
+    def to_json(self) -> dict:
+        """JSON-safe export (BENCH_serving.json tracks these across PRs)."""
+        return {
+            "total_s": self.total_s,
+            "decode_busy_s": self.decode_busy_s,
+            "prefill_busy_s": self.prefill_busy_s,
+            "overlap_saved_s": self.overlap_saved_s,
+            "serialized_s": self.serialized_s,
+        }
+
 
 def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) -> ReplayReport:
     """Price a serving engine's ``ScheduleEvent`` stream with the calibrated

@@ -1,0 +1,83 @@
+"""Request-level serving surface: one request in, one result out.
+
+The engine's unit of work used to be a *batch of prompts* (the old
+``Engine.generate(prompts, max_new, eos_id)`` signature); production serving
+is a stream of heterogeneous requests, each with its own budget, stop
+condition, sampling policy and consumer. These three types are that contract:
+
+* :class:`SamplingParams` — temperature / top-k / top-p / seed. Greedy is the
+  ``temperature=0`` point of the SAME masked-sampling path
+  (``serve.sampling.sample_masked``), not a separate code path, so a greedy
+  request in a sampled batch stays bit-identical to the all-greedy engine.
+* :class:`GenerationRequest` — prompt + ``max_new_tokens`` + per-request
+  ``eos_id`` (``None`` defers to ``ModelConfig.eos_id``) + sampling + an
+  optional ``on_token`` streaming callback fired synchronously at every
+  emitted token (including the prefill-seeded first token).
+* :class:`GenerationResult` — the emitted tokens and why emission stopped
+  (``"length"`` — budget exhausted — or ``"eos"``).
+
+RNG is a *per-request lane*: the stream of sampling keys is derived from the
+request's own ``seed`` and prompt only — never from the slot index, admission
+order, or global step count — so sibling requests retiring or being admitted
+mid-flight can never perturb another request's tokens (see
+``serve.sampling.request_key``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+FINISH_LENGTH = "length"
+FINISH_EOS = "eos"
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy. ``temperature=0`` (the default) is exact
+    greedy argmax; ``top_k=0`` disables the k-cutoff; ``top_p=1.0`` disables
+    the nucleus cutoff. ``seed`` seeds this request's private RNG lane."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+@dataclass
+class GenerationRequest:
+    """One serving request: admitted into a slot, decoded to its own budget."""
+
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None          # None -> ModelConfig.eos_id
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    on_token: Optional[Callable[[int], None]] = None  # streaming callback
+
+    def validate(self, max_len: int) -> None:
+        if not self.prompt or self.max_new_tokens < 1:
+            raise ValueError("prompts must be non-empty and max_new_tokens >= 1")
+        if len(self.prompt) + self.max_new_tokens - 1 > max_len:
+            raise ValueError(
+                f"prompt({len(self.prompt)}) + max_new_tokens"
+                f"({self.max_new_tokens}) exceeds max_len={max_len}")
+        self.sampling.validate()
+
+
+@dataclass
+class GenerationResult:
+    """Tokens emitted for one request (index-aligned with the request list)."""
+
+    tokens: list[int] = field(default_factory=list)
+    finish_reason: str = FINISH_LENGTH    # "length" | "eos"
+    prompt_len: int = 0

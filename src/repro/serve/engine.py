@@ -1,10 +1,20 @@
 """Inference engine: slot-level continuous batching with BLOCKED/HBCEM/LBIM.
 
+The serving surface is request-level: ``Engine.serve(requests)`` takes
+``GenerationRequest`` objects (per-request ``max_new_tokens`` / ``eos_id`` /
+``SamplingParams`` / streaming ``on_token`` callback) and returns
+index-aligned ``GenerationResult`` objects. The old batch-synchronous
+``generate(prompts, max_new, eos_id)`` survives only as a deprecated shim
+that constructs greedy requests. Engines are cheap views over a
+``ServingModel`` — the load-time artifact that pins the attention backend,
+pre-quantizes the W8A8 decode weights, and lays out the dual-layout cache
+specs once (``serve.serving_model``).
+
 The engine holds ONE persistent decode cache of ``slots`` batch lanes and a
 slot table mapping lanes to requests. Sequences retire mid-flight — per-slot
-``max_new`` budgets and ``eos_id`` free a lane the step it finishes — and the
-head of the pending queue is *chunk-prefilled ahead* into a staging cache,
-then dropped into the next freed lane:
+``max_new_tokens`` budgets and per-request ``eos_id`` free a lane the step it
+finishes — and the head of the pending queue is *chunk-prefilled ahead* into
+a staging cache, then dropped into the next freed lane:
 
 * **LBIM**    — the admission chunk is fused into the SAME XLA program as the
   running decode step (``core.interleave.fused_step``; the paper's
@@ -16,25 +26,30 @@ then dropped into the next freed lane:
 * **BLOCKED** — prior-PIM serialization: admission preempts and all decodes
   stall until the pending request is fully loaded.
 
-All modes emit identical greedy tokens — a slot's decode depends only on its
-own cache lane — so only the schedule differs; ``schedule_report()`` exposes
-it and ``pimsim.scheduler.replay_events`` prices it with the calibrated
-timing model.
+All modes emit identical tokens per request — a slot's decode depends only on
+its own cache lane, and sampling randomness is a per-REQUEST RNG lane
+(``sampling.request_key``) that never sees slot indices or admission order —
+so only the schedule differs; ``schedule_report()`` exposes it and
+``pimsim.scheduler.replay_events`` prices it with the calibrated timing
+model (both JSON-exportable via ``to_json()``).
 
 Slot mechanics: free lanes keep flowing through the fixed-shape decode batch
-(their garbage argmax is pinned by ``sampling.greedy_masked`` and their fill
-level clamped to 0), a retired lane's KV is left in place behind ``pos == 0``
-(decode attention masks strictly by ``[0, pos)``), and admission writes a
-freshly prefilled batch-1 cache into the lane with ``model.insert_slot``.
-Admission chunks are never padded (the final chunk of a prompt may be short),
-so state-carrying families (ssm/hybrid) stream through the same path — the
-old wave engine's equal-length / chunk-aligned prompt constraints are gone.
+(their garbage sample is pinned by ``sampling.sample_masked``'s done mask and
+their fill level clamped to 0), a retired lane's KV is left in place behind
+``pos == 0`` (decode attention masks strictly by ``[0, pos)``), and admission
+writes a freshly prefilled batch-1 cache into the lane with
+``model.insert_slot``. Admission chunks are never padded (the final chunk of
+a prompt may be short), so state-carrying families (ssm/hybrid) stream
+through the same path — the old wave engine's equal-length / chunk-aligned
+prompt constraints are gone.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,6 +58,9 @@ from repro.core import interleave
 from repro.core.pim_modes import Mode, StepPlan, plan_step
 from repro.models import model as M
 from repro.serve import sampling
+from repro.serve.api import (FINISH_EOS, FINISH_LENGTH, GenerationRequest,
+                             GenerationResult)
+from repro.serve.serving_model import ServingModel
 
 FREE, ACTIVE = "free", "active"
 
@@ -55,11 +73,21 @@ class ScheduleEvent:
     decode_ctx: int = 0     # max context (cache fill) among active lanes
 
 
+class ScheduleReport(dict):
+    """``schedule_report()``'s dict plus a machine-readable export — the
+    benchmark trajectory (BENCH_serving.json) is diffed across PRs."""
+
+    def to_json(self) -> dict:
+        out = dict(self)
+        out["modes"] = sorted(out["modes"])
+        return out
+
+
 @dataclass
 class _Slot:
     state: str = FREE
     req: int = -1
-    budget: int = 0         # this request's max_new
+    budget: int = 0         # this request's max_new_tokens
     emitted: int = 0
     ctx: int = 0            # prompt length + generated tokens in cache
 
@@ -95,37 +123,43 @@ class Engine:
     mode: Mode = Mode.HBCEM
     chunk: int = 8
     events: list = field(default_factory=list)
+    serving: Optional[ServingModel] = None
+
+    def __post_init__(self) -> None:
+        if self.serving is None:
+            self.serving = ServingModel.prepare(
+                self.cfg, self.params, max_len=self.max_len, slots=self.slots)
+        # the artifact is the source of truth for load-time decisions
+        self.cfg = self.serving.cfg
+        self.params = self.serving.params
+        self.max_len = self.serving.max_len
 
     # ------------------------------------------------------------------ API
 
-    def generate(self, prompts: list[list[int]],
-                 max_new: Union[int, Sequence[int]] = 16,
-                 eos_id: Optional[int] = None) -> list[list[int]]:
-        """Serve ``prompts`` through the persistent decode pool.
+    def serve(self, requests: Sequence[GenerationRequest]) -> list[GenerationResult]:
+        """Serve ``requests`` through the persistent decode pool.
 
-        ``max_new`` may be a single budget or one per request; ``eos_id``
-        (default ``cfg.eos_id``) retires a slot the step it is emitted (the
-        EOS token is included in the output). Results are index-aligned with
-        ``prompts``.
+        Each request decodes to its OWN ``max_new_tokens`` budget, retires
+        the step it emits its ``eos_id`` (defaulting to the config's; the
+        EOS token is included in the output), samples on its private RNG
+        lane, and — if ``on_token`` is set — streams every emitted token
+        synchronously. Results are index-aligned with ``requests``.
         """
-        n = len(prompts)
-        budgets = [max_new] * n if isinstance(max_new, int) else list(max_new)
-        if len(budgets) != n:
-            raise ValueError("one max_new per prompt")
-        eos = eos_id if eos_id is not None else self.cfg.eos_id
-        for p, b in zip(prompts, budgets):
-            if not p or b < 1:
-                raise ValueError("prompts must be non-empty and max_new >= 1")
-            if len(p) + b - 1 > self.max_len:
-                raise ValueError(
-                    f"prompt({len(p)}) + max_new({b}) exceeds max_len={self.max_len}")
+        reqs = list(requests)
+        for r in reqs:
+            r.validate(self.max_len)
+        n = len(reqs)
+        self._reqs = reqs
+        self._eos = [r.eos_id if r.eos_id is not None else self.cfg.eos_id
+                     for r in reqs]
+        self._base_keys = [sampling.request_key(r.sampling.seed, r.prompt)
+                           for r in reqs]
+        results = [GenerationResult(prompt_len=len(r.prompt)) for r in reqs]
 
         self.events.clear()
-        out: list[list[int]] = [[] for _ in range(n)]
         table = [_Slot() for _ in range(self.slots)]
         queue: list[int] = list(range(n))
-        self._cache = M.normalize_pos(
-            M.init_decode_cache(self.cfg, self.slots, self.max_len), self.slots)
+        self._cache = self.serving.init_pool(self.slots)
         cur_tok = np.zeros((self.slots,), np.int32)
         stream: Optional[_Prefill] = None
         ready: Optional[_Ready] = None
@@ -133,17 +167,27 @@ class Engine:
         def emit(si: int, tok: int) -> None:
             """Record one token for slot ``si``; retire the lane when done."""
             s = table[si]
-            out[s.req].append(tok)
+            r = reqs[s.req]
+            results[s.req].tokens.append(tok)
+            if r.on_token is not None:
+                r.on_token(tok)
             s.emitted += 1
             s.ctx += 1
-            if s.emitted >= s.budget or (eos is not None and tok == eos):
-                s.state = FREE
-                self._cache = M.reset_slot(self._cache, si)
+            eos = self._eos[s.req]
+            if eos is not None and tok == eos:
+                results[s.req].finish_reason = FINISH_EOS
+            elif s.emitted >= s.budget:
+                results[s.req].finish_reason = FINISH_LENGTH
+            else:
+                return
+            s.state = FREE
+            self._cache = M.reset_slot(self._cache, si)
 
         def place(rdy: _Ready, si: int) -> None:
             """Drop a fully prefilled request into lane ``si``."""
-            table[si] = _Slot(state=ACTIVE, req=rdy.req, budget=budgets[rdy.req],
-                              ctx=len(prompts[rdy.req]))
+            table[si] = _Slot(state=ACTIVE, req=rdy.req,
+                              budget=reqs[rdy.req].max_new_tokens,
+                              ctx=len(reqs[rdy.req].prompt))
             self._cache = M.insert_slot(self._cache, rdy.cache, si)
             cur_tok[si] = rdy.first_tok
             emit(si, rdy.first_tok)
@@ -162,8 +206,7 @@ class Engine:
 
             # -- drained pool, nothing staged: batch-prefill straight into lanes
             if not active and stream is None and queue:
-                cur_tok = self._admit_batch(queue, table, cur_tok, emit,
-                                            budgets, prompts)
+                cur_tok = self._admit_batch(queue, table, cur_tok, emit)
                 continue
 
             # -- stage the next pending request (one admission in flight)
@@ -176,12 +219,11 @@ class Engine:
                     # admission is one full batch-1 prefill pass — a
                     # serialization point in every mode, like the old wave
                     # handoff but per request.
-                    ready = self._prefill_one(r, prompts)
+                    ready = self._prefill_one(r)
                     continue
                 stream = _Prefill(
-                    req=r, toks=np.asarray([prompts[r]], np.int32),
-                    cache=M.normalize_pos(
-                        M.init_decode_cache(self.cfg, 1, self.max_len), 1))
+                    req=r, toks=np.asarray([reqs[r].prompt], np.int32),
+                    cache=self.serving.init_pool(1))
 
             # starvation-aware admission rate: each FREE lane is wasted decode
             # bandwidth, so the controller lets the processor run a bigger
@@ -203,33 +245,34 @@ class Engine:
                 plan, len(active), c if plan.prefill_chunk else 0,
                 max((table[i].ctx for i in active), default=0)))
 
+            dparams = self.serving.decode_params
             pre_logits = None
             if plan.fused:
                 chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
                 logits, self._cache, pre_logits, stream.cache = interleave.fused_step(
-                    self.params, self._cache, jnp.asarray(cur_tok)[:, None],
+                    dparams, self._cache, jnp.asarray(cur_tok)[:, None],
                     stream.cache, chunk_toks, self.cfg)
                 stream.off += c
             else:
                 if plan.decode:
                     logits, self._cache = interleave.decode_only_step(
-                        self.params, self._cache, jnp.asarray(cur_tok)[:, None],
+                        dparams, self._cache, jnp.asarray(cur_tok)[:, None],
                         self.cfg)
                 if plan.prefill_chunk:
                     chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
                     pre_logits, stream.cache = interleave.prefill_chunk_step(
-                        self.params, stream.cache, chunk_toks, self.cfg)
+                        dparams, stream.cache, chunk_toks, self.cfg)
                     stream.off += c
 
             if plan.decode:
-                done = np.ones((self.slots,), bool)
-                done[active] = False
-                tok = np.asarray(sampling.greedy_masked(logits, jnp.asarray(done)))
+                tok = self._sample_slots(logits, table, active)
                 cur_tok = tok.astype(np.int32)
                 for si in active:
                     emit(si, int(tok[si]))
                 # free lanes decode garbage each step; pin their fill level so
                 # the dummy KV write lands at column 0 and never overflows
+                done = np.ones((self.slots,), bool)
+                done[active] = False
                 self._cache["pos"] = jnp.where(
                     jnp.asarray(done), 0, self._cache["pos"])
 
@@ -237,14 +280,88 @@ class Engine:
                 # chunks are unpadded, so the last chunk's final position IS
                 # the last prompt token — its logits seed the slot's decode.
                 # The loop head places it into the next freed lane.
-                first = int(sampling.greedy(pre_logits[:, -1:, :])[0])
+                first = self._first_tokens(pre_logits[:, -1:, :], [stream.req])[0]
                 ready = _Ready(stream.req, stream.cache, first)
                 stream = None
 
         cache = self._cache
-        del self._cache
+        del self._cache, self._reqs, self._eos, self._base_keys
         self.last_cache = cache  # introspection / tests
-        return out
+        return results
+
+    def generate(self, prompts: list[list[int]],
+                 max_new: Union[int, Sequence[int]] = 16,
+                 eos_id: Optional[int] = None) -> list[list[int]]:
+        """DEPRECATED batch-synchronous shim over :meth:`serve`.
+
+        Constructs one greedy ``GenerationRequest`` per prompt (``max_new``
+        may be a single budget or one per request; ``eos_id`` overrides the
+        config's for every request) and returns bare token lists.
+        """
+        warnings.warn(
+            "Engine.generate(prompts) is deprecated; build GenerationRequest "
+            "objects and call Engine.serve(requests)",
+            DeprecationWarning, stacklevel=2)
+        n = len(prompts)
+        budgets = [max_new] * n if isinstance(max_new, int) else list(max_new)
+        if len(budgets) != n:
+            raise ValueError("one max_new per prompt")
+        reqs = [GenerationRequest(prompt=p, max_new_tokens=b, eos_id=eos_id)
+                for p, b in zip(prompts, budgets)]
+        return [res.tokens for res in self.serve(reqs)]
+
+    # --------------------------------------------------------------- sampling
+
+    def _sample_slots(self, logits, table, active) -> np.ndarray:
+        """One pool-wide sampling step: per-slot params/keys from the table.
+
+        When every active lane is greedy (the default), this is a single
+        argmax (``greedy_masked`` — sample_masked's temperature=0 fast path):
+        no RNG keys are derived and no top-k/top-p filter runs.
+        """
+        done = np.ones((self.slots,), bool)
+        done[active] = False
+        if all(self._reqs[table[si].req].sampling.temperature <= 0
+               for si in active):
+            return np.asarray(sampling.greedy_masked(logits, jnp.asarray(done)))
+        temps = np.zeros((self.slots,), np.float32)
+        tks = np.zeros((self.slots,), np.int32)
+        tps = np.ones((self.slots,), np.float32)
+        keys = np.zeros((self.slots, 2), np.uint32)
+        sampled = []
+        for si in active:
+            sp = self._reqs[table[si].req].sampling
+            temps[si] = sp.temperature
+            tks[si] = sp.top_k
+            tps[si] = sp.top_p
+            if sp.temperature > 0:
+                sampled.append(si)
+        # one batched fold_in for every sampled lane's token key (not one
+        # eager dispatch per lane per step)
+        keys[np.asarray(sampled)] = np.asarray(jax.vmap(jax.random.fold_in)(
+            jnp.stack([self._base_keys[table[si].req] for si in sampled]),
+            jnp.asarray([table[si].emitted for si in sampled], jnp.uint32)))
+        return np.asarray(sampling.sample_masked(
+            logits, jnp.asarray(done), keys=jnp.asarray(keys),
+            temperature=jnp.asarray(temps), top_k=jnp.asarray(tks),
+            top_p=jnp.asarray(tps)))
+
+    def _first_tokens(self, logits, rids: list[int]) -> list[int]:
+        """Sample each request's prefill-seeded first token (lane index 0)."""
+        g = len(rids)
+        sps = [self._reqs[r].sampling for r in rids]
+        if all(sp.temperature <= 0 for sp in sps):
+            return [int(t) for t in np.asarray(sampling.greedy(logits))]
+        keys = np.stack([
+            np.asarray(sampling.token_key(self._base_keys[r], 0))
+            if sp.temperature > 0 else np.zeros((2,), np.uint32)
+            for r, sp in zip(rids, sps)]).astype(np.uint32)
+        tok = sampling.sample_masked(
+            logits, jnp.zeros((g,), bool), keys=jnp.asarray(keys),
+            temperature=jnp.asarray([sp.temperature for sp in sps], jnp.float32),
+            top_k=jnp.asarray([sp.top_k for sp in sps], jnp.int32),
+            top_p=jnp.asarray([sp.top_p for sp in sps], jnp.float32))
+        return [int(t) for t in np.asarray(tok)]
 
     # ------------------------------------------------------- admission paths
 
@@ -254,17 +371,17 @@ class Engine:
         tolerate a ragged batch's pad-relative slot placement)."""
         return M.windowed_cache_applicable(self.cfg)
 
-    def _prefill_one(self, r: int, prompts) -> _Ready:
+    def _prefill_one(self, r: int) -> _Ready:
         """Full batch-1 prefill of request ``r`` -> a parked ``_Ready``."""
-        toks = np.asarray([prompts[r]], np.int32)
+        toks = np.asarray([self._reqs[r].prompt], np.int32)
         logits, pcache = M.prefill(
             self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len)
         pcache["pos"] = jnp.asarray([toks.shape[1]], jnp.int32)
         self.events.append(ScheduleEvent(
             plan_step(self.mode, False, True, toks.shape[1]), 0, toks.shape[1]))
-        return _Ready(r, pcache, int(sampling.greedy(logits)[0]))
+        return _Ready(r, pcache, self._first_tokens(logits, [r])[0])
 
-    def _admit_batch(self, queue, table, cur_tok, emit, budgets, prompts):
+    def _admit_batch(self, queue, table, cur_tok, emit):
         """Fill every free lane with one full (ragged) prefill pass.
 
         Used when nothing is decoding — there is no overlap to exploit, so a
@@ -273,18 +390,19 @@ class Engine:
         ring-cache configs (ring slots are placed relative to the PADDED
         batch length) fall back to per-request passes when lengths are ragged.
         """
+        reqs = self._reqs
         free = [i for i, s in enumerate(table) if s.state == FREE]
         take = [queue.pop(0) for _ in range(min(len(free), len(queue)))]
-        lens = [len(prompts[r]) for r in take]
+        lens = [len(reqs[r].prompt) for r in take]
         needs_solo = (self.cfg.family in ("ssm", "hybrid")
                       or self._solo_prefill_only())
         groups = ([[r] for r in take] if needs_solo and len(set(lens)) > 1
                   else [take])
         for group in groups:
-            glens = [len(prompts[r]) for r in group]
+            glens = [len(reqs[r].prompt) for r in group]
             toks = np.zeros((len(group), max(glens)), np.int32)
             for j, r in enumerate(group):
-                toks[j, : len(prompts[r])] = prompts[r]
+                toks[j, : len(reqs[r].prompt)] = reqs[r].prompt
             seq_lens = jnp.asarray(glens, jnp.int32)
             logits, pcache = M.prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len,
@@ -292,22 +410,22 @@ class Engine:
             pcache["pos"] = seq_lens
             self.events.append(ScheduleEvent(
                 plan_step(self.mode, False, True, sum(glens)), 0, sum(glens)))
-            first = np.asarray(sampling.greedy(logits))
+            first = self._first_tokens(logits, group)
             for j, r in enumerate(group):
                 si = free.pop(0)
-                table[si] = _Slot(state=ACTIVE, req=r, budget=budgets[r],
-                                  ctx=glens[j])
+                table[si] = _Slot(state=ACTIVE, req=r,
+                                  budget=reqs[r].max_new_tokens, ctx=glens[j])
                 self._cache = M.insert_slot(self._cache, pcache, si, src_slot=j)
-                cur_tok[si] = int(first[j])
-                emit(si, int(first[j]))
+                cur_tok[si] = first[j]
+                emit(si, first[j])
         return cur_tok
 
     # ------------------------------------------------------------- reporting
 
-    def schedule_report(self):
+    def schedule_report(self) -> ScheduleReport:
         fused = sum(1 for e in self.events if e.plan.fused)
         decode_events = [e for e in self.events if e.plan.decode]
-        return {
+        return ScheduleReport({
             "steps": len(self.events),
             "fused_steps": fused,
             "modes": {e.plan.label for e in self.events},
@@ -316,7 +434,7 @@ class Engine:
             "idle_slot_steps": sum(self.slots - e.decode_batch
                                    for e in decode_events),
             "prefill_tokens": sum(e.prefill_tokens for e in self.events),
-        }
+        })
 
 
 def wave_baseline_report(prompt_lens: Sequence[int], max_news: Sequence[int],

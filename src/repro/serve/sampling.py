@@ -1,8 +1,28 @@
-"""Token sampling: greedy / temperature / top-k (functional, rng-explicit)."""
+"""Token sampling: ONE masked-sampling path for the decode pool.
+
+``sample_masked`` is the engine's only sampler: per-slot temperature /
+top-k / top-p / RNG key vectors ride alongside the ``done`` mask, and
+``temperature == 0`` lanes take the exact argmax branch — greedy is the zero
+point of the sampled path, not a separate implementation, which is what
+keeps a greedy request bit-identical whether its batch siblings sample or
+not. ``greedy_masked`` survives as the all-greedy special case.
+
+RNG lanes are per REQUEST, not per slot: :func:`request_key` derives a base
+key from the request's own ``seed`` and a prompt checksum only, and
+:func:`token_key` folds in the request's emitted-token index. Nothing
+scheduling-dependent (slot index, admission order, sibling retirement,
+global step count) enters the derivation, so the token stream of a request
+is a pure function of (params, prompt, SamplingParams) — the property the
+continuous-batching engine's determinism tests pin down.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
+
+NEG_FILL = -1e30  # filtered-out logit value (f32-safe)
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -10,21 +30,96 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
 
-def greedy_masked(logits: jax.Array, done: jax.Array, pad_id: int = 0) -> jax.Array:
-    """Greedy sampling with per-slot done-masking (continuous batching).
+def request_key(seed: int, prompt) -> jax.Array:
+    """Per-request RNG lane base key.
 
-    ``done`` (B,) bool marks retired/free slots: their lanes still flow
-    through the fixed-shape decode batch, but their (garbage) argmax is
-    replaced by ``pad_id`` so retired lanes keep feeding a stable token and
-    never leak into results. Active lanes are untouched — identical to
-    :func:`greedy`, which keeps cross-mode token identity exact.
+    Derived from the request's ``SamplingParams.seed`` and a polynomial hash
+    of its own prompt — and deliberately nothing else — so same-seed requests
+    with different prompts decorrelate while the stream stays invariant to
+    slot placement and admission order. (A polynomial rolling hash over a
+    large prime, not a linear checksum: linear mixes collide on trivially
+    different prompts like ``[3]`` vs ``[1, 1]``.)
     """
-    tok = greedy(logits)
+    mix = 0
+    for t in prompt:
+        mix = (mix * 1000003 + int(t) + 1) % (2**61 - 1)
+    return jax.random.fold_in(jax.random.PRNGKey(seed), mix & 0xFFFFFFFF)
+
+
+def token_key(base: jax.Array, index: int) -> jax.Array:
+    """Key for the request's ``index``-th emitted token (0 = prefill-seeded)."""
+    return jax.random.fold_in(base, index)
+
+
+def _filter_top_k_top_p(lg: jax.Array, top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-lane (V,) logit filter: keep the top-k AND the nucleus top-p set.
+
+    ``top_k == 0`` disables the k cutoff; ``top_p == 1`` keeps every token
+    with non-zero residual mass. The highest-probability token is always
+    kept, so the filtered categorical is never empty.
+    """
+    v = lg.shape[-1]
+    order = jnp.argsort(-lg)                      # descending, stable
+    slg = lg[order]
+    ranks = jnp.zeros((v,), jnp.int32).at[order].set(jnp.arange(v, dtype=jnp.int32))
+    k_eff = jnp.where(top_k > 0, top_k, v)
+    probs = jax.nn.softmax(slg)
+    prev_mass = jnp.cumsum(probs) - probs         # mass strictly above each rank
+    keep_sorted = (prev_mass < top_p) & (jnp.arange(v) < k_eff)
+    return jnp.where(keep_sorted[ranks], lg, NEG_FILL)
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id",))
+def sample_masked(
+    logits: jax.Array,       # (B, 1, V)
+    done: jax.Array,         # (B,) bool — retired/free lanes
+    *,
+    keys: jax.Array,         # (B, 2) uint32 — per-lane token keys
+    temperature: jax.Array,  # (B,) f32 — 0 selects the exact argmax branch
+    top_k: jax.Array,        # (B,) int32 — 0 disables
+    top_p: jax.Array,        # (B,) f32 — 1 disables
+    pad_id: int = 0,
+) -> jax.Array:
+    """The decode pool's single sampling path → (B,) int32 (jitted — the
+    pool width and vocab are fixed per engine, so one compile serves the
+    whole run).
+
+    ``done`` lanes still flow through the fixed-shape batch but emit
+    ``pad_id`` (their logits are garbage); ``temperature == 0`` lanes take
+    the raw argmax — bit-identical to :func:`greedy` — and sampled lanes
+    draw from the temperature-scaled, top-k/top-p-filtered categorical with
+    their OWN key, so lanes never share randomness.
+    """
+    lg = logits[:, -1, :]
+    gtok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    temp = jnp.asarray(temperature, jnp.float32)
+    scaled = lg.astype(jnp.float32) / jnp.where(temp > 0, temp, 1.0)[:, None]
+    filtered = jax.vmap(_filter_top_k_top_p)(
+        scaled, jnp.asarray(top_k, jnp.int32), jnp.asarray(top_p, jnp.float32))
+    stok = jax.vmap(jax.random.categorical)(keys, filtered).astype(jnp.int32)
+    tok = jnp.where(temp > 0, stok, gtok)
     return jnp.where(jnp.asarray(done), jnp.int32(pad_id), tok)
+
+
+def greedy_masked(logits: jax.Array, done: jax.Array, pad_id: int = 0) -> jax.Array:
+    """All-greedy masked sampling — the ``temperature == 0`` point of
+    :func:`sample_masked`, as a fast path.
+
+    Emits EXACTLY what ``sample_masked`` emits when every lane's temperature
+    is zero (pinned by a unit test) without paying the sampled branch's
+    per-lane top-k/top-p filter, so the engine's default-greedy decode loop
+    stays a single argmax per step. Retired/free lanes (``done``) keep
+    feeding a stable ``pad_id`` token and never leak into results; active
+    lanes are exact argmax — identical to :func:`greedy`, which keeps
+    cross-mode token identity exact.
+    """
+    return jnp.where(jnp.asarray(done), jnp.int32(pad_id), greedy(logits))
 
 
 def sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0,
            top_k: int = 0) -> jax.Array:
+    """Single-policy batch sampling (legacy utility; the engine uses
+    :func:`sample_masked`)."""
     lg = logits[:, -1, :].astype(jnp.float32)
     if temperature <= 0.0:
         return greedy(logits)

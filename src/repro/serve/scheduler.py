@@ -1,67 +1,79 @@
 """Request-level scheduler: admission queue in front of the Engine.
 
-Maps incoming requests onto the engine's persistent decode pool by mode
-policy (the paper's workload framing: memory-intensive = short-in/long-out
-favors HBCEM; compute-intensive = long-in/short-out favors LBIM). ``auto``
-picks LBIM when the queue's aggregate prefill work dominates its decode work
-— the same TTFT-vs-decode trade the paper's Fig. 6/7 sweep demonstrates.
+Maps incoming ``GenerationRequest``s onto the engine's persistent decode
+pool by mode policy (the paper's workload framing: memory-intensive =
+short-in/long-out favors HBCEM; compute-intensive = long-in/short-out favors
+LBIM). ``auto`` picks LBIM when the queue's aggregate prefill work dominates
+its decode work — the same TTFT-vs-decode trade the paper's Fig. 6/7 sweep
+demonstrates.
 
 Admission is incremental: the engine chunk-prefills queued requests into
-lanes as they free, each request decodes exactly to its OWN ``max_new`` (or
-``eos_id``), and results come back per request id — no batch-max padding, no
-truncation of over-decoded tokens.
+lanes as they free, each request decodes exactly to its OWN
+``max_new_tokens`` (or ``eos_id``), samples on its own RNG lane, and results
+come back per request id — no batch-max padding, no truncation of
+over-decoded tokens. ``drain()`` keeps its historic ``{rid: tokens}`` shape;
+the full ``GenerationResult``s (finish reasons, prompt lengths) of the last
+drain are kept on ``Scheduler.results``.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.pim_modes import Mode
+from repro.serve.api import GenerationRequest, GenerationResult, SamplingParams
 from repro.serve.engine import Engine
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
 
 
 @dataclass
 class Scheduler:
     engine: Engine
     mode_policy: str = "auto"  # "auto" | "hbcem" | "lbim" | "blocked"
-    queue: list = field(default_factory=list)
+    queue: list = field(default_factory=list)   # [(rid, GenerationRequest)]
+    results: dict = field(default_factory=dict)  # {rid: GenerationResult}
     _next_id: int = 0
 
-    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+    def submit(self, prompt: list[int], max_new: int = 16, *,
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               on_token: Optional[Callable[[int], None]] = None) -> int:
+        """Queue one request; returns its request id."""
+        return self.submit_request(GenerationRequest(
+            prompt=prompt, max_new_tokens=max_new, eos_id=eos_id,
+            sampling=sampling if sampling is not None else SamplingParams(),
+            on_token=on_token))
+
+    def submit_request(self, request: GenerationRequest) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, prompt, max_new))
+        self.queue.append((rid, request))
         return rid
 
     def _pick_mode(self) -> Mode:
         if self.mode_policy != "auto":
             return Mode(self.mode_policy)
-        prefill_work = sum(len(r.prompt) for r in self.queue)
-        decode_work = sum(r.max_new for r in self.queue)
+        prefill_work = sum(len(r.prompt) for _, r in self.queue)
+        decode_work = sum(r.max_new_tokens for _, r in self.queue)
         # compute-intensive queue (TTFT-dominated) -> overlap with LBIM
         return Mode.LBIM if prefill_work >= decode_work else Mode.HBCEM
 
     def drain(self, eos_id: Optional[int] = None) -> dict[int, list[int]]:
         """Serve the whole queue; returns ``{rid: generated tokens}``.
 
-        Every request is admitted with its own ``max_new`` budget — the
-        engine stops that slot's decode the step the budget (or ``eos_id``,
-        defaulting to the model config's) is hit, instead of decoding the
-        whole batch to ``max(max_new)`` and truncating.
+        Every request is admitted with its own budget/eos/sampling — the
+        engine stops that slot's decode the step the budget (or ``eos_id``;
+        the drain-level argument overrides every request's, else each
+        request's own, else the model config's) is hit, instead of decoding
+        the whole batch to ``max(max_new)`` and truncating.
         """
         if not self.queue:
             return {}
         self.engine.mode = self._pick_mode()
         batch = list(self.queue)
         self.queue.clear()
-        outs = self.engine.generate([r.prompt for r in batch],
-                                    max_new=[r.max_new for r in batch],
-                                    eos_id=eos_id)
-        return {r.rid: out for r, out in zip(batch, outs)}
+        reqs = [dataclasses.replace(r, eos_id=eos_id) if eos_id is not None
+                else r for _, r in batch]
+        outs: list[GenerationResult] = self.engine.serve(reqs)
+        self.results = {rid: res for (rid, _), res in zip(batch, outs)}
+        return {rid: res.tokens for rid, res in self.results.items()}

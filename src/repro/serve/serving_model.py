@@ -1,0 +1,118 @@
+"""``ServingModel`` — the LOAD-time serving artifact.
+
+Production PIM serving fixes every layout and datapath decision at model
+load, not per call (PIM-SHERPA's design rule: bank layout and DRAM
+attributes are attributes of the *deployed artifact*, because re-deciding
+them per request would re-stream the weight banks the accelerator exists to
+keep stationary; PIM-AI exposes the same compile-once/request-many chip
+interface). ``ServingModel.prepare`` is that fixing point for this repo:
+
+* the attention **backend** is resolved ONCE (``auto`` → the platform's
+  concrete kernel) and pinned into the held config, so no serving step
+  re-detects the platform;
+* under ``cfg.quantized_decode`` the qkv/o/MLP weight leaves are
+  **pre-quantized at load** (``core.quant.prepare_decode_params`` →
+  ``PreparedLinear`` leaves holding the weight-stationary int8 image +
+  per-channel scales). Decode steps feed ``pim_gemv_int8`` directly —
+  quantizing W8A8 weights on the fly every step re-reads the float weights
+  each token, which is exactly the DRAM traffic the paper's
+  weight-stationary CU banks eliminate. The on-the-fly path survives as the
+  fallback for ad-hoc engines and is token-identical (same quantizer);
+* the slot pool's **dual-layout cache specs** (column-wise K ``(.., hd, L)``,
+  row-wise V ``(.., L, hd)`` from ``core.kv_mapping`` — the paper's §III-C
+  mapping) are laid out eagerly, so an engine never improvises cache shapes.
+
+Engines are cheap views over the artifact: ``sm.engine(slots=..., mode=...)``
+— prepare once, serve many.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import dispatch, quant
+from repro.core.pim_modes import Mode
+from repro.models import model as M
+from repro.serve.api import GenerationRequest, GenerationResult
+
+# Model-zoo subtrees that never reach the dispatched decode linears, so
+# holding int8 images for them would be dead weight in the artifact: the
+# audio encoder runs once per request on the float tree, and cross-attention
+# projections are raw matmuls (memory K/V projected at prefill; decode-side
+# q/o unwrap via ``quant.raw_weight``).
+_PREFILL_ONLY_SUBTREES = ("enc_layers", "cross_attn")
+
+
+def _prefill_only(keystr: str) -> bool:
+    return any(f"['{name}']" in keystr for name in _PREFILL_ONLY_SUBTREES)
+
+
+@dataclass
+class ServingModel:
+    """Immutable-by-convention load-time artifact: config with the backend
+    pinned, the float param tree (prefill/GEMM operand), the prepared decode
+    tree (``PreparedLinear`` leaves when pre-quantized, else the float tree),
+    and the slot pool's cache layout."""
+
+    cfg: ModelConfig          # attn_backend resolved to a concrete backend
+    params: dict              # float tree — full-prefill (GEMM) programs
+    decode_params: dict       # PreparedLinear-leafed tree — decode programs
+    max_len: int
+    slots: int                # default pool width (engines may override)
+    cache_specs: Any          # eval_shape'd slot-pool layout (col-K / row-V)
+    prequantized: bool
+
+    # ------------------------------------------------------------------ load
+
+    @classmethod
+    def prepare(cls, cfg: ModelConfig, params: dict, *, max_len: int = 256,
+                slots: int = 4, prequantize: Optional[bool] = None) -> "ServingModel":
+        """Resolve every load-time decision once; returns the artifact.
+
+        ``prequantize`` defaults to ``cfg.quantized_decode``; it is forced
+        off for the attention-free ``ssm`` family, whose decode consumes
+        weights with raw matmuls (no dispatched linears to feed).
+        """
+        cfg = cfg.replace(attn_backend=dispatch.resolve_backend(cfg))
+        if prequantize is None:
+            prequantize = cfg.quantized_decode
+        prequantize = bool(prequantize) and cfg.family != "ssm"
+        decode_params = (quant.prepare_decode_params(params, exclude=_prefill_only)
+                        if prequantize else params)
+        return cls(
+            cfg=cfg,
+            params=params,
+            decode_params=decode_params,
+            max_len=max_len,
+            slots=slots,
+            cache_specs=M.decode_cache_specs(cfg, slots, max_len),
+            prequantized=prequantize,
+        )
+
+    @property
+    def backend(self) -> str:
+        """The concrete attention backend pinned at load."""
+        return self.cfg.attn_backend
+
+    # ----------------------------------------------------------------- serve
+
+    def init_pool(self, slots: Optional[int] = None) -> dict:
+        """A fresh slot-pool decode cache in the prepared dual layout."""
+        n = self.slots if slots is None else slots
+        return M.normalize_pos(M.init_decode_cache(self.cfg, n, self.max_len), n)
+
+    def engine(self, *, slots: Optional[int] = None, mode: Mode = Mode.HBCEM,
+               chunk: int = 8):
+        """A continuous-batching engine view over this artifact."""
+        from repro.serve.engine import Engine  # deferred: engine imports us
+
+        return Engine(self.cfg, self.params, max_len=self.max_len,
+                      slots=self.slots if slots is None else slots,
+                      mode=mode, chunk=chunk, serving=self)
+
+    def generate(self, requests: Sequence[GenerationRequest], *,
+                 mode: Mode = Mode.HBCEM, slots: Optional[int] = None,
+                 chunk: int = 8) -> list[GenerationResult]:
+        """One-shot convenience: serve ``requests`` through a fresh engine."""
+        return self.engine(slots=slots, mode=mode, chunk=chunk).serve(requests)

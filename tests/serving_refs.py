@@ -1,0 +1,27 @@
+"""Shared serving-test reference: the ONE raw prefill+decode generator that
+both the continuous-batching suite and the request-level API suite compare
+the engine against (engine-free by construction, so it can't inherit an
+engine bug), plus the canonical ragged request set."""
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.serve import sampling
+
+MAX_LEN = 64
+PROMPTS = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9], [2, 4, 6, 8, 1]]
+BUDGETS = [2, 7, 3, 5, 1]
+
+
+def ref_generate(cfg, params, prompt, max_new, eos=None, max_len=MAX_LEN):
+    """One-request-at-a-time greedy reference: raw prefill + decode loop."""
+    logits, cache = M.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg, max_len)
+    cache["pos"] = jnp.asarray([len(prompt)], jnp.int32)
+    tok = int(sampling.greedy(logits)[0])
+    outs = [tok]
+    while len(outs) < max_new and (eos is None or tok != eos):
+        logits, cache = M.decode_step(
+            params, cache, jnp.asarray([[tok]], jnp.int32), cfg)
+        tok = int(sampling.greedy(logits)[0])
+        outs.append(tok)
+    return outs

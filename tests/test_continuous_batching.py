@@ -18,13 +18,13 @@ from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
 from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
-from repro.serve import sampling
 from repro.serve.engine import (Engine, wave_baseline_events,
                                 wave_baseline_report)
+from serving_refs import BUDGETS, MAX_LEN, PROMPTS, ref_generate
 
-MAX_LEN = 64
-PROMPTS = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9], [2, 4, 6, 8, 1]]
-BUDGETS = [2, 7, 3, 5, 1]
+# this module deliberately exercises the DEPRECATED generate(prompts) shim
+# end to end (the acceptance criterion of the request-level API migration)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 
 @pytest.fixture(scope="module")
@@ -32,21 +32,6 @@ def setup():
     cfg = get_config("llama3-8b", smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     return cfg, params
-
-
-def ref_generate(cfg, params, prompt, max_new, eos=None):
-    """One-request-at-a-time reference: raw prefill + decode loop."""
-    logits, cache = M.prefill(
-        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg, MAX_LEN)
-    cache["pos"] = jnp.asarray([len(prompt)], jnp.int32)
-    tok = int(sampling.greedy(logits)[0])
-    outs = [tok]
-    while len(outs) < max_new and (eos is None or tok != eos):
-        logits, cache = M.decode_step(
-            params, cache, jnp.asarray([[tok]], jnp.int32), cfg)
-        tok = int(sampling.greedy(logits)[0])
-        outs.append(tok)
-    return outs
 
 
 @pytest.fixture(scope="module")

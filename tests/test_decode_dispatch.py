@@ -24,6 +24,8 @@ from repro.models import model as M
 from repro.serve.engine import Engine
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
+
 
 # --------------------------------------------------------------------------
 # kernel vs oracle: per-sequence pos

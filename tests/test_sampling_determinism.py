@@ -1,0 +1,152 @@
+"""Per-slot RNG determinism + the unified masked-sampling path.
+
+The RNG lane of a request is derived from its own SamplingParams.seed and
+prompt only — never from slot index, admission order, or sibling lifetime —
+so the same seed + the same request set must emit identical tokens no matter
+how the scheduler interleaves them (different submission orders, different
+pool widths, different modes, solo vs batched). Covered for the dense family
+and one state-carrying family (rwkv6: recurrent state, per-request
+admission).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim_modes import Mode
+from repro.models import model as M
+from repro.serve import sampling
+from repro.serve.api import GenerationRequest, SamplingParams
+from repro.serve.serving_model import ServingModel
+
+MAX_LEN = 48
+
+
+# ------------------------------------------------------ sample_masked (unit)
+
+
+def _logits(b=3, v=17, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, 1, v))
+
+
+def _params(b, temps, ks=None, ps=None, seeds=None):
+    return dict(
+        keys=jnp.stack([jax.random.PRNGKey(s)
+                        for s in (seeds or list(range(b)))]),
+        temperature=jnp.asarray(temps, jnp.float32),
+        top_k=jnp.asarray(ks or [0] * b, jnp.int32),
+        top_p=jnp.asarray(ps or [1.0] * b, jnp.float32),
+    )
+
+
+def test_temperature_zero_is_exact_greedy():
+    lg = _logits()
+    done = jnp.zeros((3,), bool)
+    out = sampling.sample_masked(lg, done, **_params(3, [0.0, 0.0, 0.0]))
+    assert (np.asarray(out) == np.asarray(sampling.greedy(lg))).all()
+    # and greedy_masked IS the temperature=0 case of the same path
+    assert (np.asarray(sampling.greedy_masked(lg, done))
+            == np.asarray(sampling.greedy(lg))).all()
+
+
+def test_done_lanes_emit_pad():
+    lg = _logits()
+    done = jnp.asarray([True, False, True])
+    out = np.asarray(sampling.sample_masked(lg, done, **_params(3, [0.9] * 3)))
+    assert out[0] == 0 and out[2] == 0
+
+
+def test_top_k_one_and_tiny_top_p_collapse_to_argmax():
+    lg = _logits(b=4, v=33, seed=3)
+    done = jnp.zeros((4,), bool)
+    gd = np.asarray(sampling.greedy(lg))
+    k1 = sampling.sample_masked(lg, done, **_params(4, [1.3] * 4, ks=[1] * 4))
+    assert (np.asarray(k1) == gd).all()
+    p0 = sampling.sample_masked(lg, done, **_params(4, [1.3] * 4, ps=[1e-9] * 4))
+    assert (np.asarray(p0) == gd).all()
+
+
+def test_mixed_greedy_and_sampled_lanes_do_not_interact():
+    """A greedy lane inside a sampled batch is bit-identical to greedy."""
+    lg = _logits(b=3, v=29, seed=5)
+    done = jnp.zeros((3,), bool)
+    mixed = np.asarray(sampling.sample_masked(
+        lg, done, **_params(3, [0.0, 0.8, 1.5])))
+    assert mixed[0] == np.asarray(sampling.greedy(lg))[0]
+    # the sampled lanes are a function of their OWN key only
+    again = np.asarray(sampling.sample_masked(
+        lg, done, **_params(3, [0.0, 0.8, 1.5])))
+    assert (mixed == again).all()
+
+
+def test_request_key_ignores_scheduling_but_not_prompt():
+    a = sampling.request_key(7, [1, 2, 3])
+    assert np.asarray(a).tolist() == np.asarray(
+        sampling.request_key(7, [1, 2, 3])).tolist()
+    assert np.asarray(a).tolist() != np.asarray(
+        sampling.request_key(7, [3, 2, 1])).tolist()
+    assert np.asarray(a).tolist() != np.asarray(
+        sampling.request_key(8, [1, 2, 3])).tolist()
+    # linear-checksum collision class ([3] vs [1, 1]) must not alias lanes
+    assert np.asarray(sampling.request_key(7, [3])).tolist() != np.asarray(
+        sampling.request_key(7, [1, 1])).tolist()
+
+
+# -------------------------------------------- engine-level determinism (e2e)
+
+
+def _requests(vocab):
+    rng = np.random.default_rng(11)
+    samplers = [
+        SamplingParams(temperature=0.8, seed=1),
+        SamplingParams(temperature=1.1, top_k=8, seed=2),
+        SamplingParams(),  # greedy rider in a sampled pool
+        SamplingParams(temperature=0.9, top_p=0.7, seed=3),
+        SamplingParams(temperature=0.7, top_k=16, top_p=0.9, seed=4),
+    ]
+    return [GenerationRequest(
+                prompt=list(map(int, rng.integers(1, vocab,
+                                                  int(rng.integers(2, 7))))),
+                max_new_tokens=int(rng.integers(2, 6)),
+                sampling=sp)
+            for sp in samplers]
+
+
+def _serve_permuted(sm, reqs, order, slots, mode):
+    out = sm.engine(slots=slots, mode=mode, chunk=2).serve(
+        [reqs[i] for i in order])
+    return {order[j]: out[j].tokens for j in range(len(order))}
+
+
+@pytest.mark.parametrize("arch,family", [("llama3-8b", "dense"),
+                                         ("rwkv6-1.6b", "ssm")])
+def test_same_seed_same_requests_any_admission_order(arch, family):
+    """same seed + same request set => identical tokens regardless of
+    admission order, pool width, mode, or sibling retirement."""
+    cfg = get_config(arch, smoke=True)
+    assert cfg.family == family
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=3)
+    reqs = _requests(cfg.vocab_size)
+    n = len(reqs)
+
+    base = _serve_permuted(sm, reqs, list(range(n)), slots=2, mode=Mode.HBCEM)
+    shuffled = _serve_permuted(sm, reqs, [2, 0, 4, 1, 3], slots=3,
+                               mode=Mode.LBIM)
+    assert shuffled == base
+    # solo pool: every sibling interaction removed entirely
+    solo = {}
+    for i in range(n):
+        solo.update(_serve_permuted(sm, reqs, [i], slots=1, mode=Mode.HBCEM))
+    assert solo == base
+
+
+def test_rerun_is_deterministic():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+    reqs = _requests(cfg.vocab_size)
+    a = _serve_permuted(sm, reqs, list(range(len(reqs))), 2, Mode.LBIM)
+    b = _serve_permuted(sm, reqs, list(range(len(reqs))), 2, Mode.LBIM)
+    assert a == b

@@ -8,6 +8,8 @@ from repro.models import model as M
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Scheduler
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -1,0 +1,233 @@
+"""Request-level serving API: ServingModel artifact + GenerationRequest.
+
+Acceptance criteria of the API-redesign PR:
+* ``ServingModel.prepare`` pins the backend once and pre-quantizes the W8A8
+  decode weights at load — and the pre-quantized decode emits tokens
+  IDENTICAL to the on-the-fly fallback across BLOCKED/HBCEM/LBIM;
+* a ``SamplingParams(temperature=0)`` request reproduces the greedy
+  continuous-batching outputs exactly (the old ``generate`` surface survives
+  as a deprecated shim over ``serve``);
+* per-request ``eos_id`` / budgets / streaming callbacks behave per request.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import dispatch
+from repro.core.pim_modes import Mode
+from repro.core.quant import PreparedLinear
+from repro.models import model as M
+from repro.serve.api import GenerationRequest, GenerationResult, SamplingParams
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Scheduler
+from repro.serve.serving_model import ServingModel
+
+from serving_refs import BUDGETS, MAX_LEN, PROMPTS, ref_generate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def served(setup):
+    cfg, params = setup
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
+            for p, b in zip(PROMPTS, BUDGETS)]
+    return sm, sm.engine(mode=Mode.LBIM, chunk=4).serve(reqs)
+
+
+# --------------------------------------------------------------- the artifact
+
+
+def test_prepare_pins_backend(setup):
+    cfg, params = setup
+    assert cfg.attn_backend == "auto"
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN)
+    assert sm.backend == dispatch.resolve_backend(cfg)
+    assert sm.cfg.attn_backend == sm.backend != "auto"
+    # engines adopt the artifact's pinned config
+    assert sm.engine().cfg.attn_backend == sm.backend
+
+
+def test_prepare_rejects_unknown_backend(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="attn_backend"):
+        ServingModel.prepare(cfg.replace(attn_backend="typo"), params)
+
+
+def test_prepare_lays_out_dual_cache_specs(setup):
+    """The paper's §III-C mapping is fixed at load: column-wise K
+    (..., hd, Lmax), row-wise V (..., Lmax, hd) — and the engine pool
+    matches the prepared specs exactly."""
+    cfg, params = setup
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=3)
+    k, v = sm.cache_specs["k"], sm.cache_specs["v"]
+    assert k.shape[-2:] == (cfg.head_dim, MAX_LEN)
+    assert v.shape[-2:] == (MAX_LEN, cfg.head_dim)
+    pool = sm.init_pool()
+    assert jax.eval_shape(lambda: pool["k"]).shape == k.shape
+    assert jax.eval_shape(lambda: pool["v"]).shape == v.shape
+
+
+def test_prequantize_defaults_follow_config(setup):
+    cfg, params = setup
+    assert not ServingModel.prepare(cfg, params).prequantized
+    smq = ServingModel.prepare(cfg.replace(quantized_decode=True), params)
+    assert smq.prequantized
+    # prepared tree: decode linears carry the load-time int8 image
+    leaf = smq.decode_params["layers"]["attn"]["wq"]
+    assert isinstance(leaf, PreparedLinear)
+    assert leaf.w_q.dtype == jnp.int8
+    assert leaf.w_q.shape == leaf.w.shape[:1] + leaf.w.shape[:0:-1]
+    # float tree stays raw for the prefill/GEMM programs
+    assert not isinstance(smq.params["layers"]["attn"]["wq"], PreparedLinear)
+
+
+def test_prequantize_skips_prefill_only_subtrees():
+    """Audio encoder / cross-attention weights never reach the dispatched
+    decode linears — holding int8 images for them would be dead weight."""
+    cfg = get_config("seamless-m4t-large-v2", smoke=True).replace(
+        quantized_decode=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sm = ServingModel.prepare(cfg, params, max_len=32, slots=2)
+    assert sm.prequantized
+    assert isinstance(sm.decode_params["dec_layers"]["attn"]["wq"],
+                      PreparedLinear)
+    assert not isinstance(sm.decode_params["enc_layers"]["attn"]["wq"],
+                          PreparedLinear)
+    assert not isinstance(sm.decode_params["dec_layers"]["cross_attn"]["wk"],
+                          PreparedLinear)
+
+
+@pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
+def test_prequantized_decode_matches_on_the_fly(setup, mode):
+    """Tentpole acceptance: quantize-at-load == quantize-every-step, token
+    for token, in every engine mode."""
+    cfg, params = setup
+    cfgq = cfg.replace(quantized_decode=True)
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
+            for p, b in zip(PROMPTS, BUDGETS)]
+    outs = {}
+    for prequantize in (True, False):
+        sm = ServingModel.prepare(cfgq, params, max_len=MAX_LEN, slots=2,
+                                  prequantize=prequantize)
+        assert sm.prequantized is prequantize
+        outs[prequantize] = [r.tokens for r in
+                             sm.engine(mode=mode, chunk=4).serve(reqs)]
+    assert outs[True] == outs[False]
+
+
+def test_one_artifact_many_engines(served, setup):
+    """prepare once, request many: engines are cheap stateless views."""
+    sm, results = served
+    cfg, params = setup
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
+            for p, b in zip(PROMPTS, BUDGETS)]
+    again = sm.engine(mode=Mode.HBCEM, chunk=4).serve(reqs)
+    assert [r.tokens for r in again] == [r.tokens for r in results]
+
+
+# ----------------------------------------------------- request-level surface
+
+
+def test_temperature_zero_reproduces_greedy(served, setup):
+    """SamplingParams(temperature=0) == today's greedy continuous batching
+    == the raw prefill+decode reference."""
+    cfg, params = setup
+    _, results = served
+    for res, p, b in zip(results, PROMPTS, BUDGETS):
+        assert res.tokens == ref_generate(cfg, params, p, b)
+        assert res.finish_reason == "length"
+        assert res.prompt_len == len(p)
+
+
+def test_generate_shim_warns_and_matches_serve(served, setup):
+    cfg, params = setup
+    _, results = served
+    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
+    with pytest.deprecated_call():
+        out = eng.generate(PROMPTS, max_new=BUDGETS)
+    assert out == [r.tokens for r in results]
+
+
+def test_per_request_eos(setup, served):
+    """eos retires ONLY the request that carries it; siblings run to budget."""
+    cfg, params = setup
+    _, results = served
+    eos = results[1].tokens[3]
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b,
+                              eos_id=eos if i == 1 else None)
+            for i, (p, b) in enumerate(zip(PROMPTS, BUDGETS))]
+    res = sm.engine(mode=Mode.LBIM, chunk=4).serve(reqs)
+    assert res[1].tokens == results[1].tokens[:4]
+    assert res[1].finish_reason == "eos"
+    for i in (0, 2, 3, 4):
+        assert res[i].tokens == results[i].tokens
+        assert res[i].finish_reason == "length"
+
+
+def test_streaming_callback_per_request(setup):
+    """on_token fires synchronously for every emitted token (including the
+    prefill-seeded first one), in emission order, per request only."""
+    cfg, params = setup
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+    streams = {i: [] for i in range(len(PROMPTS))}
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b,
+                              on_token=streams[i].append)
+            for i, (p, b) in enumerate(zip(PROMPTS, BUDGETS))]
+    res = sm.engine(mode=Mode.LBIM, chunk=4).serve(reqs)
+    for i, r in enumerate(res):
+        assert streams[i] == r.tokens
+
+
+def test_request_validation(setup):
+    cfg, params = setup
+    sm = ServingModel.prepare(cfg, params, max_len=8, slots=1)
+    eng = sm.engine()
+    with pytest.raises(ValueError):
+        eng.serve([GenerationRequest(prompt=[1, 2, 3, 4], max_new_tokens=6)])
+    with pytest.raises(ValueError):
+        eng.serve([GenerationRequest(prompt=[], max_new_tokens=2)])
+    with pytest.raises(ValueError):
+        eng.serve([GenerationRequest(prompt=[1], max_new_tokens=2,
+                                     sampling=SamplingParams(temperature=-1))])
+    with pytest.raises(ValueError):
+        eng.serve([GenerationRequest(prompt=[1], max_new_tokens=2,
+                                     sampling=SamplingParams(top_p=0.0))])
+
+
+def test_scheduler_carries_request_fields(setup):
+    cfg, params = setup
+    s = Scheduler(Engine(cfg, params, max_len=MAX_LEN, slots=2, chunk=4),
+                  mode_policy="hbcem")
+    seen = []
+    rid = s.submit(PROMPTS[1], max_new=5, sampling=SamplingParams(),
+                   on_token=seen.append)
+    out = s.drain()
+    assert out[rid] == seen and len(out[rid]) == 5
+    assert isinstance(s.results[rid], GenerationResult)
+    assert s.results[rid].finish_reason == "length"
+
+
+def test_schedule_report_to_json_roundtrips(served):
+    import json
+    sm, _ = served
+    eng = sm.engine(mode=Mode.LBIM, chunk=4)
+    eng.serve([GenerationRequest(prompt=p, max_new_tokens=b)
+               for p, b in zip(PROMPTS, BUDGETS)])
+    rep = eng.schedule_report()
+    payload = json.loads(json.dumps(rep.to_json()))
+    assert payload["steps"] == rep["steps"]
+    assert sorted(payload["modes"]) == sorted(rep["modes"])
+
+    from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
+    sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
+    sim_payload = json.loads(json.dumps(sim.to_json()))
+    assert sim_payload["serialized_s"] == pytest.approx(sim.serialized_s)

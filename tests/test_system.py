@@ -7,6 +7,8 @@ from repro.core.pim_modes import Mode, plan_step
 from repro.models import model as M
 from repro.serve.engine import Engine
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
+
 PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8]] * 3 + [[3, 1, 4, 1, 5, 9, 2, 6]] * 3
 
 
