@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Run:
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 from benchmarks import (ablation_kv, continuous_batching, fig4_timeline, fig5,
@@ -26,6 +27,9 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="reduced scale, no committed JSON overwritten "
+                         "(suites without a dry_run arg run at full scale)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
 
@@ -37,7 +41,10 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            fn(emit)
+            if args.dry_run and "dry_run" in inspect.signature(fn).parameters:
+                fn(emit, dry_run=True)
+            else:
+                fn(emit)
         except Exception as e:  # keep the suite running
             emit(f"{name}/ERROR", 0.0, repr(e))
 

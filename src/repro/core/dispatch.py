@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import PreparedLinear, raw_weight
-from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_paged_op)
 from repro.kernels.pim_gemv.ops import linear_w8a8, linear_w8a8_prequant
 
 _KERNEL_BACKENDS = ("pallas", "interpret")
@@ -75,6 +76,33 @@ def decode_attention(
         scale=scale,
         softcap=softcap,
         block_l=cfg.decode_block_l,
+        interpret=(backend == "interpret"),
+        use_kernel=(backend in _KERNEL_BACKENDS),
+    )
+
+
+def decode_attention_paged(
+    q: jax.Array,            # (B, Hq, hd) single-token query heads
+    k_pages: jax.Array,      # (P, Hkv, hd, Bsz) column-wise pages
+    v_pages: jax.Array,      # (P, Hkv, Bsz, hd) row-wise pages
+    block_table: jax.Array,  # (B, NB) int32 — physical page per logical block
+    end,                     # scalar or (B,) — live range [start, end)
+    *,
+    start=None,
+    scale: float,
+    softcap=None,
+    cfg,
+) -> jax.Array:
+    """Dispatched BLOCK-PAGED decode attention: the block table indirects
+    each sequence's logical blocks to shared physical pages (prefix reuse /
+    CachePool storage) — scalar-prefetch index maps on the kernel backends,
+    gather-materialize on the reference path. Returns (B, Hq, hd) float32."""
+    backend = resolve_backend(cfg)
+    return decode_attention_paged_op(
+        q, k_pages, v_pages, block_table, end,
+        start=start,
+        scale=scale,
+        softcap=softcap,
         interpret=(backend == "interpret"),
         use_kernel=(backend in _KERNEL_BACKENDS),
     )

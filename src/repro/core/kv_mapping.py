@@ -122,6 +122,78 @@ def append_layer(
     return k_cache, v_cache
 
 
+# ---------------------------------------------------------------------------
+# Block-paged storage (serving CachePool / paged decode-attention kernel)
+# ---------------------------------------------------------------------------
+#
+# A *page* is one Bsz-token block of a single layer's KV, stored in the SAME
+# dual layout the contiguous cache uses — K pages column-wise ``(hd, Bsz)``,
+# V pages row-wise ``(Bsz, hd)`` — so a page is bit-identical to the
+# corresponding column/row span of the contiguous cache and can be gathered
+# back (or streamed by the paged kernel) without any re-layout. Pools stack
+# layers first: K pages ``(nL, P, H, hd, Bsz)``, V pages ``(nL, P, H, Bsz,
+# hd)``; a *block table* of physical page ids then drives either
+# gather-materialization (reference/dense backends) or the scalar-prefetch
+# index maps of ``kernels.decode_attention.decode_attention_paged``.
+
+
+def init_paged_cache(
+    n_layers: int,
+    n_pages: int,
+    n_kv_heads: int,
+    head_dim: int,
+    block: int,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Allocate an empty physical page pool (cdpim per-block layout)."""
+    return {
+        "k_pages": jnp.zeros((n_layers, n_pages, n_kv_heads, head_dim, block), dtype),
+        "v_pages": jnp.zeros((n_layers, n_pages, n_kv_heads, block, head_dim), dtype),
+    }
+
+
+def extract_block(k_lane: jax.Array, v_lane: jax.Array, block_idx: int,
+                  block: int) -> tuple[jax.Array, jax.Array]:
+    """Cut logical block ``block_idx`` out of one contiguous cache lane.
+
+    ``k_lane`` (nL, H, hd, Lmax) column-wise / ``v_lane`` (nL, H, Lmax, hd)
+    row-wise -> K page (nL, H, hd, Bsz), V page (nL, H, Bsz, hd). Pure
+    slicing — pages preserve the lane's exact bits.
+    """
+    lo = block_idx * block
+    return (jax.lax.dynamic_slice_in_dim(k_lane, lo, block, axis=-1),
+            jax.lax.dynamic_slice_in_dim(v_lane, lo, block, axis=-2))
+
+
+def gather_pages(k_pages: jax.Array, v_pages: jax.Array,
+                 table) -> tuple[jax.Array, jax.Array]:
+    """Materialize a contiguous prefix from physical pages.
+
+    ``table`` (n,) int — physical page ids in logical order. Returns
+    K (nL, H, hd, n*Bsz) / V (nL, H, n*Bsz, hd): the contiguous dual-layout
+    span those pages hold, bit-identical to the lanes they were extracted
+    from (gather + transpose only, no arithmetic).
+    """
+    idx = jnp.asarray(table, jnp.int32)
+    kg = jnp.take(k_pages, idx, axis=1)           # (nL, n, H, hd, Bsz)
+    vg = jnp.take(v_pages, idx, axis=1)           # (nL, n, H, Bsz, hd)
+    nl, n, h, hd, bsz = kg.shape
+    k = jnp.transpose(kg, (0, 2, 3, 1, 4)).reshape(nl, h, hd, n * bsz)
+    v = jnp.transpose(vg, (0, 2, 1, 3, 4)).reshape(nl, h, n * bsz, hd)
+    return k, v
+
+
+def store_block(pages: dict, phys: int, k_block: jax.Array,
+                v_block: jax.Array) -> dict:
+    """Write one (K page, V page) pair into physical slot ``phys``."""
+    return {
+        "k_pages": pages["k_pages"].at[:, phys].set(
+            k_block.astype(pages["k_pages"].dtype)),
+        "v_pages": pages["v_pages"].at[:, phys].set(
+            v_block.astype(pages["v_pages"].dtype)),
+    }
+
+
 def _upcast(cache: jax.Array, like: jax.Array) -> jax.Array:
     """f8 caches (beyond-paper int8-KV analogue) upcast at the read; XLA
     fuses the convert into the contraction so no extra HBM pass occurs."""

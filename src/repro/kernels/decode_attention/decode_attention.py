@@ -146,3 +146,76 @@ def decode_attention(
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
         interpret=interpret,
     )(start_b, end_b, q, k_cache, v_cache)
+
+
+def _paged_kernel(start_ref, end_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, block: int, n_blocks: int,
+                  scale: float, softcap: float | None):
+    # the block table is consumed entirely by the BlockSpec index maps — the
+    # body itself is layout-blind and identical to the contiguous kernel
+    del table_ref
+    _decode_attn_kernel(start_ref, end_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, block_l=block, n_l=n_blocks,
+                        scale=scale, softcap=softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def decode_attention_paged(
+    q: jax.Array,            # (B, Hkv, G, hd)
+    k_pages: jax.Array,      # (P, Hkv, hd, Bsz) column-wise pages
+    v_pages: jax.Array,      # (P, Hkv, Bsz, hd) row-wise pages
+    block_table: jax.Array,  # (B, NB) int32 — physical page per logical block
+    pos: jax.Array,          # (B,) int32 — end of the live range (exclusive)
+    start: jax.Array,        # (B,) int32 — start of the live range (inclusive)
+    *,
+    scale: float,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over BLOCK-PAGED KV: same online-softmax body as
+    :func:`decode_attention`, but the L-tile grid dim walks each sequence's
+    *logical* blocks and the K/V BlockSpec index maps indirect through the
+    scalar-prefetched block table to the *physical* page — the software
+    analogue of CD-PIM's bank remapping staying out of the CU datapath.
+    Pages are shared across sequences read-only (prefix reuse); logical tile
+    order is preserved, so the accumulation order — and the output bits —
+    match the contiguous kernel exactly. Dead-tile clamping works unchanged:
+    tiles outside ``[start, end)`` re-address the last live page and issue no
+    new HBM copy.
+    """
+    b, hkv, g, hd = q.shape
+    bsz = k_pages.shape[-1]
+    nb = block_table.shape[1]
+    grid = (b, hkv, nb)
+
+    kernel = functools.partial(
+        _paged_kernel, block=bsz, n_blocks=nb, scale=scale, softcap=softcap)
+
+    def _page(l, sr, er, tr, i):
+        return tr[i, _clamp_tile(l, sr[i], er[i], bsz)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # start / end / block table ahead of the pipeline
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, l, sr, er, tr: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd, bsz),
+                         lambda i, j, l, sr, er, tr: (_page(l, sr, er, tr, i), j, 0, 0)),
+            pl.BlockSpec((1, 1, bsz, hd),
+                         lambda i, j, l, sr, er, tr: (_page(l, sr, er, tr, i), j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, l, sr, er, tr: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    end_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(start_b, end_b, jnp.asarray(block_table, jnp.int32), q, k_pages, v_pages)

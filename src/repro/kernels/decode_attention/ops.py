@@ -10,8 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention, decode_attention_paged)
+from repro.kernels.decode_attention.ref import (decode_attention_paged_ref,
+                                                decode_attention_ref)
 
 
 def decode_attention_op(
@@ -45,4 +47,39 @@ def decode_attention_op(
     start = jnp.zeros((b,), jnp.int32) if start is None else start
     out = decode_attention(qg, k_cache, v_cache, pos, start, scale=scale,
                            softcap=softcap, block_l=bl, interpret=interpret)
+    return out.reshape(b, hq, hd)
+
+
+def decode_attention_paged_op(
+    q: jax.Array,            # (B, Hq, hd) — ungrouped query heads
+    k_pages: jax.Array,      # (P, Hkv, hd, Bsz) column-wise pages
+    v_pages: jax.Array,      # (P, Hkv, Bsz, hd) row-wise pages
+    block_table: jax.Array,  # (B, NB) int32 — physical page per logical block
+    pos,                     # scalar or (B,) int32 — end of live range
+    *,
+    start=None,              # scalar or (B,) int32 — live-range start; None -> 0
+    scale: float,
+    softcap: float | None = None,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Block-paged sibling of :func:`decode_attention_op`: the block table
+    maps each sequence's logical Bsz-token blocks to physical pages. Returns
+    (B, Hq, hd) float32. The logical length is ``NB * Bsz`` — no padding
+    pass is needed because pages ARE the tile grid."""
+    b, hq, hd = q.shape
+    hkv = k_pages.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if not use_kernel:
+        out = decode_attention_paged_ref(qg, k_pages, v_pages, bt, pos_b,
+                                         scale, softcap, start=start)
+        return out.reshape(b, hq, hd)
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    out = decode_attention_paged(qg, k_pages, v_pages, bt, pos_b, start_b,
+                                 scale=scale, softcap=softcap,
+                                 interpret=interpret)
     return out.reshape(b, hq, hd)

@@ -35,3 +35,35 @@ def decode_attention_ref(
     p = jnp.where(valid[:, None, None, :], p, 0.0)  # empty range -> zero output
     # inner-product flow: contract L against V rows
     return jnp.einsum("bkgl,bkld->bkgd", p, v_cache.astype(jnp.float32))
+
+
+def materialize_pages(k_pages, v_pages, block_table):
+    """Gather paged KV back to per-sequence contiguous dual-layout caches.
+
+    ``k_pages`` (P, H, hd, Bsz) / ``v_pages`` (P, H, Bsz, hd) /
+    ``block_table`` (B, NB) -> K (B, H, hd, NB*Bsz), V (B, H, NB*Bsz, hd).
+    Pure gather + transpose: the result is bit-identical to the contiguous
+    cache the pages were cut from.
+    """
+    kg = jnp.take(k_pages, block_table, axis=0)   # (B, NB, H, hd, Bsz)
+    vg = jnp.take(v_pages, block_table, axis=0)   # (B, NB, H, Bsz, hd)
+    b, nb, h, hd, bsz = kg.shape
+    k = jnp.transpose(kg, (0, 2, 3, 1, 4)).reshape(b, h, hd, nb * bsz)
+    v = jnp.transpose(vg, (0, 2, 1, 3, 4)).reshape(b, h, nb * bsz, hd)
+    return k, v
+
+
+def decode_attention_paged_ref(
+    q: jnp.ndarray,            # (B, Hkv, G, hd)
+    k_pages: jnp.ndarray,      # (P, Hkv, hd, Bsz)
+    v_pages: jnp.ndarray,      # (P, Hkv, Bsz, hd)
+    block_table: jnp.ndarray,  # (B, NB) int32
+    pos,
+    scale: float,
+    softcap: float | None = None,
+    start=None,
+) -> jnp.ndarray:
+    """Gather-materialize oracle for the paged kernel: build each sequence's
+    contiguous cache from its block table, then run the contiguous oracle."""
+    k, v = materialize_pages(k_pages, v_pages, jnp.asarray(block_table, jnp.int32))
+    return decode_attention_ref(q, k, v, pos, scale, softcap, start=start)

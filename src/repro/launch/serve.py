@@ -5,7 +5,10 @@ The model is prepared ONCE (``ServingModel.prepare``: backend pinned, W8A8
 weights pre-quantized under ``--quantized-decode``, cache layout fixed), then
 every request rides its own ``GenerationRequest`` — budget, eos, sampling
 (``--temperature/--top-k/--top-p/--seed``) and, with ``--stream``, a
-streaming callback printing tokens as they emit.
+streaming callback printing tokens as they emit. ``--shared-prefix N`` gives
+every request an identical N-token system prompt so ``--prefix-cache`` (on
+by default) demonstrates admission-time reuse; ``--no-prefix-cache``
+disables it for an A/B schedule comparison.
 """
 from __future__ import annotations
 
@@ -47,6 +50,14 @@ def main() -> None:
     ap.add_argument("--quantized-decode", action="store_true",
                     help="route decode projections through the pre-quantized "
                          "W8A8 PIM-GEMV path (quantized at load)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share content-hashed prompt-prefix blocks across "
+                         "requests (skipped prefill tokens; on by default "
+                         "where the cache family supports it)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical system-prompt tokens "
+                         "to every request (demonstrates prefix reuse)")
     ap.add_argument("--stream", action="store_true",
                     help="print each token the step it is emitted")
     args = ap.parse_args()
@@ -61,9 +72,11 @@ def main() -> None:
           f"prequantized={sm.prequantized}")
 
     rng = np.random.default_rng(0)
+    shared = list(map(int, rng.integers(1, cfg.vocab_size, args.shared_prefix)))
     reqs = []
     for i in range(args.requests):
-        prompt = list(map(int, rng.integers(1, cfg.vocab_size, args.prompt_len)))
+        prompt = shared + list(map(int, rng.integers(1, cfg.vocab_size,
+                                                     args.prompt_len)))
         on_token = (lambda t, i=i: print(f"  [stream] req{i} -> {t}",
                                          flush=True)) if args.stream else None
         reqs.append(GenerationRequest(
@@ -73,13 +86,19 @@ def main() -> None:
                                     seed=args.seed + i),
             on_token=on_token))
 
-    eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk)
+    eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk,
+                    prefix_cache=args.prefix_cache)
     t0 = time.perf_counter()
     results = eng.serve(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
+    rep = eng.schedule_report()
     print(f"mode={args.mode} generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s) schedule={eng.schedule_report().to_json()}")
+          f"({toks/dt:.1f} tok/s) schedule={rep.to_json()}")
+    if eng.prefix_cache:
+        print(f"prefix cache: {rep['prefix']['prefix_hits']} hits / "
+              f"{rep['prefix']['prefix_lookups']} lookups, "
+              f"{rep['reused_prefix_tokens']} prefill tokens skipped")
     for i, r in enumerate(results[:3]):
         print(f"  req{i} ({r.finish_reason}): {r.tokens}")
 

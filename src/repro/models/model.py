@@ -546,67 +546,57 @@ def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int, src_len: int 
 
 
 # ===========================================================================
-# slot-level cache surgery (continuous batching)
+# slot-level cache surgery — MOVED to repro.serve.cache (deprecation shims)
 # ===========================================================================
 #
-# The serving engine holds ONE persistent decode cache of `slots` batch
-# lanes. Every cache leaf except "pos" stacks layers first, so the batch
-# axis is uniformly axis 1: KV leaves (nL, B, ...), recurrent-state leaves
-# (nL, B, ...), audio cross leaves (nL, B, ...). "pos" is the per-lane fill
-# level (B,).
+# Lane surgery is an attribute of the serving CachePool now: the typed
+# per-family states in ``repro.serve.cache`` own insert/retire semantics
+# (zero-on-retire keys are DERIVED from the cache structure, not hardcoded
+# here). These shims survive exactly one PR for out-of-tree callers.
+
+
+def _lane_surgery_deprecated(name: str) -> None:
+    import warnings
+
+    warnings.warn(
+        f"model.{name} is deprecated; lane surgery lives on "
+        f"repro.serve.cache.CachePool (module functions: insert_lane / "
+        f"reset_lane / normalize_pos / lane_count)",
+        DeprecationWarning, stacklevel=3)
 
 
 def normalize_pos(cache: dict, batch: int) -> dict:
-    """Return ``cache`` with ``pos`` broadcast to a per-lane (B,) vector."""
-    out = dict(cache)
-    out["pos"] = jnp.broadcast_to(
-        jnp.reshape(jnp.asarray(cache["pos"], jnp.int32), (-1,)), (batch,))
-    return out
+    """DEPRECATED shim over :func:`repro.serve.cache.normalize_pos`."""
+    _lane_surgery_deprecated("normalize_pos")
+    from repro.serve import cache as cache_lib
+
+    return cache_lib.normalize_pos(cache, batch)
 
 
 def insert_slot(cache: dict, src_cache: dict, slot: int, src_slot: int = 0) -> dict:
-    """Copy lane ``src_slot`` of ``src_cache`` into lane ``slot`` of ``cache``.
+    """DEPRECATED shim over :func:`repro.serve.cache.insert_lane`."""
+    _lane_surgery_deprecated("insert_slot")
+    from repro.serve import cache as cache_lib
 
-    ``src_cache`` is a freshly prefilled cache (typically batch 1 from a
-    chunked admission prefill, or one lane of a batched cold-start prefill);
-    its KV / recurrent-state lanes and fill level replace whatever the freed
-    slot held. Stale KV beyond the new fill level is left in place — decode
-    attention masks strictly by ``[0, pos)``, so it is unreachable.
-    """
-    out = dict(cache)
-    for key, dst in cache.items():
-        if key == "pos":
-            continue
-        lane = jax.lax.dynamic_slice_in_dim(src_cache[key], src_slot, 1, axis=1)
-        out[key] = jax.lax.dynamic_update_slice_in_dim(
-            dst, lane.astype(dst.dtype), slot, axis=1)
-    src_pos = normalize_pos(src_cache, dst_batch(src_cache))["pos"][src_slot]
-    out["pos"] = normalize_pos(cache, dst_batch(cache))["pos"].at[slot].set(src_pos)
-    return out
+    return cache_lib.insert_lane(cache, src_cache, slot, src_slot)
 
 
 def reset_slot(cache: dict, slot: int) -> dict:
-    """Retire lane ``slot``: zero its recurrent state and fill level.
+    """DEPRECATED shim over :func:`repro.serve.cache.reset_lane` (which
+    derives zero-on-retire keys from the cache structure instead of this
+    function's old hardcoded recurrent-key tuple)."""
+    _lane_surgery_deprecated("reset_slot")
+    from repro.serve import cache as cache_lib
 
-    KV lanes are NOT cleared — they are dead weight behind ``pos == 0`` and
-    will be overwritten by the next :func:`insert_slot`. Recurrent state
-    (RWKV wkv / Mamba ssd) has no position masking, so it is zeroed to keep
-    the free lane's dummy decode numerically bounded.
-    """
-    out = dict(cache)
-    for key in ("wkv", "att_tail", "ffn_tail", "ssd", "conv_x", "conv_bc"):
-        if key in cache:
-            lane = jnp.zeros_like(
-                jax.lax.dynamic_slice_in_dim(cache[key], slot, 1, axis=1))
-            out[key] = jax.lax.dynamic_update_slice_in_dim(cache[key], lane, slot, axis=1)
-    out["pos"] = normalize_pos(cache, dst_batch(cache))["pos"].at[slot].set(0)
-    return out
+    return cache_lib.reset_lane(cache, slot)
 
 
 def dst_batch(cache: dict) -> int:
-    """Batch-lane count of a stacked decode cache."""
-    return jax.tree_util.tree_leaves(
-        {k: v for k, v in cache.items() if k != "pos"})[0].shape[1]
+    """DEPRECATED shim over :func:`repro.serve.cache.lane_count`."""
+    _lane_surgery_deprecated("dst_batch")
+    from repro.serve import cache as cache_lib
+
+    return cache_lib.lane_count(cache)
 
 
 # ===========================================================================

@@ -94,6 +94,8 @@ class ReplayReport:
     decode_busy_s: float
     prefill_busy_s: float
     overlap_saved_s: float  # serialized cost minus scheduled cost
+    reused_prefill_tokens: int = 0  # prompt tokens served from the prefix store
+    prefix_saved_s: float = 0.0     # processor prefill time those tokens skip
 
     @property
     def serialized_s(self) -> float:
@@ -107,6 +109,8 @@ class ReplayReport:
             "prefill_busy_s": self.prefill_busy_s,
             "overlap_saved_s": self.overlap_saved_s,
             "serialized_s": self.serialized_s,
+            "reused_prefill_tokens": self.reused_prefill_tokens,
+            "prefix_saved_s": self.prefix_saved_s,
         }
 
 
@@ -126,9 +130,19 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
     * fused steps overlap the halves (``max``), with the controller falling
       back to serialized PIM_MAC_FM whenever overlap would lose — mirroring
       ``lbim_e2e``'s mode switch; split/blocked steps serialize (``+``).
+    * prefix-store hits (``e.reused_tokens``) are prompt tokens the engine
+      *gathered* instead of prefilled: they never enter any step's cost, and
+      the report prices what they WOULD have cost as ``prefix_saved_s`` —
+      the admission-time saving ``BENCH_serving.json`` tracks.
     """
     total = decode_busy = prefill_busy = 0.0
+    reused = 0
+    saved = 0.0
     for e in events:
+        r = getattr(e, "reused_tokens", 0)
+        if r:
+            reused += r
+            saved += gpu_prefill_time(model, r, dev)
         d_full = d_half = 0.0
         if e.plan.decode and e.decode_batch > 0:
             ctx = max(e.decode_ctx, 1)
@@ -147,7 +161,8 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
         prefill_busy += p
     return ReplayReport(total_s=total, decode_busy_s=decode_busy,
                         prefill_busy_s=prefill_busy,
-                        overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0))
+                        overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0),
+                        reused_prefill_tokens=reused, prefix_saved_s=saved)
 
 
 def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:

@@ -76,8 +76,15 @@ class GenerationRequest:
 
 @dataclass
 class GenerationResult:
-    """Tokens emitted for one request (index-aligned with the request list)."""
+    """Tokens emitted for one request (index-aligned with the request list).
+
+    ``reused_prefix_tokens`` counts prompt tokens served from the engine's
+    content-hashed prefix store (shared system prompts / few-shot headers)
+    instead of being prefilled — admission-time work the schedule skipped.
+    Reuse never changes the emitted tokens, only the schedule.
+    """
 
     tokens: list[int] = field(default_factory=list)
     finish_reason: str = FINISH_LENGTH    # "length" | "eos"
     prompt_len: int = 0
+    reused_prefix_tokens: int = 0

@@ -1,0 +1,594 @@
+"""Typed ``CachePool``: slot table + per-family cache state + prefix reuse.
+
+The serving engine used to plumb the decode cache around as a raw
+dict-of-arrays: lane surgery lived in ``models.model`` (with a hardcoded
+recurrent-key tuple in ``reset_slot``), and the engine special-cased cache
+families at admission. That is exactly the software layout-management gap
+PIM-SHERPA identifies for PIM deployments — the bank mapping was an
+attribute of *call sites*, not of the deployed artifact. This module makes
+the cache a typed object instead:
+
+* :class:`CachePool` owns the slot table and one state object per cache
+  *family* present in the config, all behind one protocol —
+  ``alloc(request) -> slot``, ``insert(slot, prefilled)``, ``retire(slot)``,
+  ``views()`` for the decode step, ``commit(new_cache)`` after it. The
+  engine never touches a cache key or a family name.
+* The per-family states are typed: :class:`PagedKVState` (dense KV backed by
+  block-paged storage in the paper's §III-C dual layout — K pages
+  column-wise ``(hd, Bsz)``, V pages row-wise ``(Bsz, hd)``),
+  :class:`RingKVState` (gemma2 W-slot rings), :class:`RecurrentState`
+  (RWKV wkv / Mamba ssd — zeroed on retire), :class:`StaticKVState`
+  (audio cross-attention memory). Which states exist is DERIVED from the
+  config's cache structure (:func:`derive_state_specs`), so a new family's
+  novel leaves are zero-on-retire by construction — nothing to hardcode,
+  nothing to leak across slot reuse.
+* :class:`PagedKVState` carries a content-hashed **prefix store**: at
+  insert, full ``block_size``-token blocks of the prompt are cut out of the
+  lane (bit-exact — pages preserve the dual layout) and indexed by the token
+  prefix they encode; at admission, a matching prompt prefix is *gathered*
+  into the staging cache instead of prefilled, so shared system prompts /
+  few-shot headers cost zero prefill tokens after their first request.
+  Shared pages are read-only by construction — lanes are materialized
+  copies, so the first append into a lane never writes a shared page
+  (copy-on-write degenerates to copy-on-insert). The block table drives the
+  gather-materialize path here (reference/dense backends); the same tables
+  feed ``kernels.decode_attention.decode_attention_paged``'s scalar-prefetch
+  index maps on the Pallas backends.
+
+Admission *policy* is derived from the same specs (:class:`AdmissionPolicy`):
+ring states cannot chunk-ingest (solo full prefills), recurrent states
+cannot ride a right-padded ragged batch, and prefix reuse is only sound when
+KV is the whole cache state (a recurrent family's prefix state snapshot is a
+ROADMAP follow-up). The engine consults the policy — it has no family
+branches of its own.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Any, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_mapping
+from repro.models import model as M
+
+FREE, ACTIVE = "free", "active"
+
+# Leaf names with positional masking or one-shot semantics: everything ELSE
+# in a decode cache is recurrent state that must be zeroed when a lane is
+# retired (no hardcoded per-family tuple — a new family's novel keys are
+# zero-on-retire by default, so state can't silently leak across slot reuse).
+KV_KEYS = ("k", "v")
+RING_KEYS = ("k_loc", "v_loc")
+STATIC_KEYS = ("cross_k", "cross_v")
+NON_RECURRENT_KEYS = frozenset(KV_KEYS + RING_KEYS + STATIC_KEYS + ("pos",))
+
+
+# ===========================================================================
+# lane surgery primitives (moved here from models.model; shims remain there)
+# ===========================================================================
+
+
+def lane_count(cache: dict) -> int:
+    """Batch-lane count of a stacked decode cache."""
+    return jax.tree_util.tree_leaves(
+        {k: v for k, v in cache.items() if k != "pos"})[0].shape[1]
+
+
+def normalize_pos(cache: dict, batch: int) -> dict:
+    """Return ``cache`` with ``pos`` broadcast to a per-lane (B,) vector."""
+    out = dict(cache)
+    out["pos"] = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache["pos"], jnp.int32), (-1,)), (batch,))
+    return out
+
+
+def _copy_lane(dst: jax.Array, src: jax.Array, slot: int,
+               src_slot: int) -> jax.Array:
+    lane = jax.lax.dynamic_slice_in_dim(src, src_slot, 1, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, lane.astype(dst.dtype), slot, axis=1)
+
+
+def _zero_lane(arr: jax.Array, slot: int) -> jax.Array:
+    lane = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(arr, slot, 1, axis=1))
+    return jax.lax.dynamic_update_slice_in_dim(arr, lane, slot, axis=1)
+
+
+def insert_lane(cache: dict, src_cache: dict, slot: int,
+                src_slot: int = 0) -> dict:
+    """Copy lane ``src_slot`` of ``src_cache`` into lane ``slot`` of ``cache``.
+
+    ``src_cache`` is a freshly prefilled cache; its leaves and fill level
+    replace whatever the freed slot held. Stale KV beyond the new fill level
+    is left in place — decode attention masks strictly by ``[0, pos)``.
+    """
+    out = dict(cache)
+    for key, dst in cache.items():
+        if key == "pos":
+            continue
+        out[key] = _copy_lane(dst, src_cache[key], slot, src_slot)
+    src_pos = normalize_pos(src_cache, lane_count(src_cache))["pos"][src_slot]
+    out["pos"] = normalize_pos(cache, lane_count(cache))["pos"].at[slot].set(src_pos)
+    return out
+
+
+def reset_lane(cache: dict, slot: int) -> dict:
+    """Retire lane ``slot``: zero its recurrent state and fill level.
+
+    Zero-on-retire keys are DERIVED: every leaf not in
+    :data:`NON_RECURRENT_KEYS` is recurrent state with no position masking,
+    so it is zeroed to keep the free lane's dummy decode bounded. KV / ring /
+    static lanes stay as dead weight behind ``pos == 0``.
+    """
+    out = dict(cache)
+    for key in cache:
+        if key not in NON_RECURRENT_KEYS:
+            out[key] = _zero_lane(cache[key], slot)
+    out["pos"] = normalize_pos(cache, lane_count(cache))["pos"].at[slot].set(0)
+    return out
+
+
+# ===========================================================================
+# cache-state specs: derived, not declared per family
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class StateSpec:
+    """One cache family present in a config's decode cache."""
+
+    kind: str                 # "paged_kv" | "ring" | "recurrent" | "static"
+    keys: tuple[str, ...]
+    zero_on_retire: bool
+
+
+def derive_state_specs(cfg: ModelConfig) -> tuple[StateSpec, ...]:
+    """Decompose a config's decode-cache structure into typed state specs.
+
+    Derived from the abstract cache tree (``eval_shape`` — no allocation):
+    known leaf groups map to their typed state; every leftover leaf is
+    recurrent state, zeroed on retire. This replaces the old hardcoded
+    ``("wkv", "att_tail", ...)`` tuple in ``model.reset_slot``.
+    """
+    struct = M.decode_cache_specs(cfg, 1, 8)
+    keys = {k for k in struct if k != "pos"}
+    specs: list[StateSpec] = []
+    claimed: set[str] = set()
+    if set(KV_KEYS) <= keys:
+        specs.append(StateSpec("paged_kv", KV_KEYS, False))
+        claimed |= set(KV_KEYS)
+    if set(RING_KEYS) <= keys:
+        specs.append(StateSpec("ring", RING_KEYS, False))
+        claimed |= set(RING_KEYS)
+    static = tuple(sorted(set(STATIC_KEYS) & keys))
+    if static:
+        specs.append(StateSpec("static", static, False))
+        claimed |= set(static)
+    recurrent = tuple(sorted(keys - claimed))
+    if recurrent:
+        specs.append(StateSpec("recurrent", recurrent, True))
+    return tuple(specs)
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """What the engine may do at admission — derived from the state specs,
+    so the engine itself never branches on a cache family."""
+
+    chunkable: bool        # False: ring states only load via full batch-1 prefill
+    ragged_batch_ok: bool  # False: recurrent/ring states reject padded ragged batches
+    prefix_capable: bool   # True: KV is the whole state -> prefix reuse is sound
+
+
+def derive_policy(specs: tuple[StateSpec, ...]) -> AdmissionPolicy:
+    kinds = {s.kind for s in specs}
+    return AdmissionPolicy(
+        chunkable="ring" not in kinds,
+        ragged_batch_ok=kinds <= {"paged_kv", "static"},
+        prefix_capable=kinds == {"paged_kv"},
+    )
+
+
+# ===========================================================================
+# typed per-family states
+# ===========================================================================
+
+
+class CacheState(Protocol):
+    """One cache family's slice of the slot pool, behind a uniform protocol."""
+
+    spec: StateSpec
+
+    def insert(self, src_cache: dict, slot: int, src_slot: int) -> None: ...
+    def retire(self, slot: int) -> None: ...
+    def views(self) -> dict: ...
+    def commit(self, new_cache: dict) -> None: ...
+
+
+class _LaneState:
+    """Shared plumbing: a dict of stacked lane leaves for this family."""
+
+    def __init__(self, spec: StateSpec, leaves: dict):
+        self.spec = spec
+        self.leaves = {k: leaves[k] for k in spec.keys}
+
+    def insert(self, src_cache: dict, slot: int, src_slot: int) -> None:
+        for k in self.spec.keys:
+            self.leaves[k] = _copy_lane(self.leaves[k], src_cache[k], slot, src_slot)
+
+    def retire(self, slot: int) -> None:
+        if self.spec.zero_on_retire:
+            for k in self.spec.keys:
+                self.leaves[k] = _zero_lane(self.leaves[k], slot)
+
+    def views(self) -> dict:
+        return dict(self.leaves)
+
+    def commit(self, new_cache: dict) -> None:
+        for k in self.spec.keys:
+            self.leaves[k] = new_cache[k]
+
+
+class RingKVState(_LaneState):
+    """gemma2 W-slot ring buffers (``k_loc``/``v_loc``): steady-state decode
+    structures — admission only via full batch-1 prefill (policy-enforced)."""
+
+
+class RecurrentState(_LaneState):
+    """RWKV wkv / Mamba ssd leaves: no positional masking, so a retired
+    lane's state is zeroed before reuse (spec-driven, not hardcoded)."""
+
+
+class StaticKVState(_LaneState):
+    """Per-request constant memory (audio cross-attention K/V): copied at
+    insert, never appended to, never zeroed."""
+
+
+class PrefixStore:
+    """Content-hashed block-paged prompt-prefix KV (the paper's dual layout
+    per page). Index key ``i`` is the exact token prefix ``prompt[:(i+1)*Bsz]``
+    — chain lookup stops at the first miss, so a hit always denotes a full
+    shared prefix. LRU-evicted at capacity (smarter eviction: ROADMAP)."""
+
+    def __init__(self, n_layers: int, n_kv_heads: int, head_dim: int,
+                 block: int, capacity: int, dtype):
+        self.block = block
+        self.capacity = max(int(capacity), 1)
+        self.pages = kv_mapping.init_paged_cache(
+            n_layers, self.capacity, n_kv_heads, head_dim, block, dtype)
+        self._index: OrderedDict[bytes, int] = OrderedDict()
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def _key(self, prompt, i: int) -> bytes:
+        return np.asarray(prompt[: (i + 1) * self.block], np.int32).tobytes()
+
+    def match(self, prompt) -> list[int]:
+        """Longest stored block-chain prefix of ``prompt`` — capped one token
+        short of the full prompt (the final token must be prefilled to seed
+        the first decode logits). Returns physical page ids in logical order."""
+        max_blocks = max(len(prompt) - 1, 0) // self.block
+        pages: list[int] = []
+        for i in range(max_blocks):
+            phys = self._index.get(self._key(prompt, i))
+            if phys is None:
+                break
+            self._index.move_to_end(self._key(prompt, i))  # LRU touch
+            pages.append(phys)
+        return pages
+
+    def _alloc_page(self, protected: set[int]) -> Optional[tuple[int, list[int]]]:
+        """A free physical page, evicting LRU entries if needed — but never a
+        page in ``protected`` (e.g. this call's own earlier chain blocks, so
+        a tiny store can't self-evict mid-chain and alias two logical blocks
+        to one page). Returns (page, evicted page ids) or None."""
+        if self._free:
+            return self._free.pop(), []
+        for key in list(self._index):  # LRU order
+            phys = self._index[key]
+            if phys not in protected:
+                del self._index[key]
+                return phys, [phys]
+        return None
+
+    def put(self, prompt, src_cache: dict, src_slot: int,
+            n_valid: int) -> tuple[list[int], list[int]]:
+        """Harvest every full block of ``prompt[:n_valid]`` from lane
+        ``src_slot`` of ``src_cache`` into the store (dedup by content key).
+        Returns (the prompt's physical page ids — existing + new, the page
+        ids evicted to make room)."""
+        k_lane = src_cache["k"][:, src_slot]   # (nL, H, hd, Lmax)
+        v_lane = src_cache["v"][:, src_slot]   # (nL, H, Lmax, hd)
+        pages: list[int] = []
+        evicted: list[int] = []
+        for i in range(min(n_valid, len(prompt)) // self.block):
+            key = self._key(prompt, i)
+            phys = self._index.get(key)
+            if phys is None:
+                alloc = self._alloc_page(protected=set(pages))
+                if alloc is None:
+                    break
+                phys, ev = alloc
+                evicted.extend(ev)
+                kb, vb = kv_mapping.extract_block(k_lane, v_lane, i, self.block)
+                self.pages = kv_mapping.store_block(self.pages, phys, kb, vb)
+                self._index[key] = phys
+            else:
+                self._index.move_to_end(key)
+            pages.append(phys)
+        return pages, evicted
+
+    def gather(self, pages: list[int]) -> tuple[jax.Array, jax.Array]:
+        """Materialize ``pages`` back to a contiguous dual-layout span."""
+        return kv_mapping.gather_pages(
+            self.pages["k_pages"], self.pages["v_pages"], pages)
+
+
+class PagedKVState(_LaneState):
+    """Dense KV: contiguous decode-tier lanes + a block-paged prefix store.
+
+    The lanes keep the exact contiguous dual layout the decode step (and the
+    contiguous Pallas kernel) consumes — a lane is the *materialized* view
+    of its blocks, gathered once at insert rather than per step. The prefix
+    store is the paged tier: content-addressed pages shared read-only across
+    requests; ``match``/``gather`` preload a staging cache so matched prompt
+    tokens are never prefilled, and ``insert`` harvests new pages.
+    """
+
+    def __init__(self, spec: StateSpec, leaves: dict, cfg: ModelConfig,
+                 block_size: int, prefix_pages: Optional[int] = None,
+                 store: Optional[PrefixStore] = None, enabled: bool = True):
+        super().__init__(spec, leaves)
+        k = self.leaves["k"]                      # (nL, B, H, hd, Lmax)
+        nl, slots, h, hd, lmax = k.shape
+        self.block_size = block_size
+        if store is not None:
+            self.store: Optional[PrefixStore] = store
+        elif enabled:
+            capacity = (prefix_pages if prefix_pages is not None
+                        else 4 * slots * max(lmax // max(block_size, 1), 1))
+            self.store = PrefixStore(nl, h, hd, block_size, capacity, k.dtype)
+        else:
+            # reuse off (flag or family): no page buffers are allocated
+            self.store = None
+        # per-slot logical->physical prefix block table (introspection + the
+        # paged-kernel path; -1 = lane-resident block with no shared page)
+        self.block_tables = np.full(
+            (slots, max(lmax // max(block_size, 1), 1)), -1, np.int64)
+
+    def match_prefix(self, prompt) -> list[int]:
+        return self.store.match(prompt) if self.store is not None else []
+
+    def preload_prefix(self, staging: dict, pages: list[int]) -> dict:
+        """Gather ``pages`` into columns ``[0, n*Bsz)`` of a fresh batch-1
+        staging cache and advance its fill level — the chunk prefill then
+        starts at the first un-shared token."""
+        assert self.store is not None
+        n = len(pages) * self.store.block
+        k, v = self.store.gather(pages)
+        out = dict(staging)
+        out["k"] = staging["k"].at[:, 0, :, :, :n].set(
+            k.astype(staging["k"].dtype))
+        out["v"] = staging["v"].at[:, 0, :, :n, :].set(
+            v.astype(staging["v"].dtype))
+        out["pos"] = jnp.asarray([n], jnp.int32)
+        return out
+
+    def harvest(self, slot: int, prompt, src_cache: dict, src_slot: int) -> None:
+        if self.store is None:
+            return
+        pages, evicted = self.store.put(prompt, src_cache, src_slot, len(prompt))
+        for phys in evicted:
+            # an evicted page's content is gone: scrub stale references so no
+            # block table ever aliases the recycled physical id
+            self.block_tables[self.block_tables == phys] = -1
+        self.block_tables[slot] = -1
+        self.block_tables[slot, : len(pages)] = pages
+
+    def retire(self, slot: int) -> None:
+        super().retire(slot)
+        self.block_tables[slot] = -1
+
+
+# ===========================================================================
+# the pool
+# ===========================================================================
+
+
+@dataclass
+class SlotInfo:
+    """One decode lane's bookkeeping (owned by the pool, read by the engine)."""
+
+    state: str = FREE
+    req: int = -1
+    budget: int = 0         # this request's max_new_tokens
+    emitted: int = 0
+    ctx: int = 0            # prompt length + generated tokens in cache
+    reused_tokens: int = 0  # prompt tokens served from the prefix store
+
+
+class CachePool:
+    """The slot pool: table + typed per-family states + admission policy.
+
+    One protocol for every family: ``alloc``/``insert``/``retire`` do the
+    lane surgery, ``views()`` hands the decode step its cache dict,
+    ``commit()`` takes the step's output back (pinning free lanes' fill to
+    0 so their dummy decodes never overflow). ``stage_admission`` builds the
+    batch-1 staging cache for chunked prefill — preloaded from the prefix
+    store on a hit. The prefix store survives :meth:`reset`, so reuse works
+    across drains of the same engine.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_len: int, n_slots: int, *,
+                 prefix_cache: bool = True, block_size: int = 8,
+                 prefix_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.prefix_pages = prefix_pages
+        self.specs = derive_state_specs(cfg)
+        self.policy = derive_policy(self.specs)
+        self.prefix_cache = bool(prefix_cache and self.policy.prefix_capable
+                                 and block_size > 0)
+        self.stats = {"prefix_lookups": 0, "prefix_hits": 0,
+                      "reused_prefix_tokens": 0}
+        self._build(keep_store=None)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _make_state(self, spec: StateSpec, leaves: dict,
+                    store: Optional[PrefixStore]) -> CacheState:
+        if spec.kind == "paged_kv":
+            return PagedKVState(spec, leaves, self.cfg, self.block_size,
+                                self.prefix_pages, store=store,
+                                enabled=self.prefix_cache)
+        cls = {"ring": RingKVState, "recurrent": RecurrentState,
+               "static": StaticKVState}[spec.kind]
+        return cls(spec, leaves)
+
+    def _build(self, keep_store: Optional[PrefixStore]) -> None:
+        cache = normalize_pos(
+            M.init_decode_cache(self.cfg, self.n_slots, self.max_len),
+            self.n_slots)
+        self.states: list[CacheState] = [
+            self._make_state(s, cache, keep_store) for s in self.specs]
+        self._pos = cache["pos"]
+        self.slots: list[SlotInfo] = [SlotInfo() for _ in range(self.n_slots)]
+
+    def reset(self) -> None:
+        """Fresh lanes, slot table, and per-drain stats; the prefix store
+        (the cross-drain asset) is retained."""
+        kv = self._kv
+        self._build(keep_store=kv.store
+                    if (kv is not None and self.prefix_cache) else None)
+        # stats are per drain, like the engine's event stream — only the
+        # store's CONTENT outlives a serve() call
+        self.stats = {"prefix_lookups": 0, "prefix_hits": 0,
+                      "reused_prefix_tokens": 0}
+
+    @property
+    def _kv(self) -> Optional[PagedKVState]:
+        for st in getattr(self, "states", []):
+            if isinstance(st, PagedKVState):
+                return st
+        return None
+
+    # ------------------------------------------------------------ slot table
+
+    def get(self, slot: int) -> SlotInfo:
+        return self.slots[slot]
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.state == FREE]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.state == ACTIVE]
+
+    def has_work(self) -> bool:
+        return any(s.state == ACTIVE for s in self.slots)
+
+    # -------------------------------------------------------------- protocol
+
+    def alloc(self, request: Any, rid: int, *, reused_tokens: int = 0) -> int:
+        """Claim the first free lane for ``request`` (a GenerationRequest)."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("CachePool.alloc: no free slot")
+        si = free[0]
+        self.slots[si] = SlotInfo(state=ACTIVE, req=rid,
+                                  budget=request.max_new_tokens,
+                                  ctx=len(request.prompt),
+                                  reused_tokens=reused_tokens)
+        return si
+
+    def insert(self, slot: int, prefilled: dict, *, src_slot: int = 0,
+               prompt=None) -> None:
+        """Drop lane ``src_slot`` of a prefilled cache into lane ``slot``;
+        with ``prompt``, harvest its full blocks into the prefix store."""
+        for st in self.states:
+            st.insert(prefilled, slot, src_slot)
+        src_pos = normalize_pos(prefilled, lane_count(prefilled))["pos"][src_slot]
+        self._pos = self._pos.at[slot].set(src_pos)
+        kv = self._kv
+        if self.prefix_cache and prompt is not None and kv is not None:
+            kv.harvest(slot, prompt, prefilled, src_slot)
+
+    def retire(self, slot: int) -> None:
+        """Free lane ``slot``: zero spec-derived recurrent state, pin fill
+        to 0 (KV stays as masked dead weight)."""
+        for st in self.states:
+            st.retire(slot)
+        self._pos = self._pos.at[slot].set(0)
+        self.slots[slot] = replace(self.slots[slot], state=FREE)
+
+    def views(self) -> dict:
+        """The decode-step cache dict (contiguous dual-layout lanes)."""
+        out: dict = {}
+        for st in self.states:
+            out.update(st.views())
+        out["pos"] = self._pos
+        return out
+
+    def commit(self, new_cache: dict) -> None:
+        """Absorb a decode step's updated cache. Free lanes decode garbage
+        each step; their fill level is pinned back to 0 here so the dummy KV
+        write keeps landing at column 0 and never overflows."""
+        for st in self.states:
+            st.commit(new_cache)
+        free = np.zeros((self.n_slots,), bool)
+        for i in self.free_slots():
+            free[i] = True
+        self._pos = jnp.where(jnp.asarray(free), 0, new_cache["pos"])
+
+    # ----------------------------------------------------------- admission
+
+    def init_staging(self, batch: int = 1) -> dict:
+        """A fresh admission staging cache (same layout, ``batch`` lanes)."""
+        return normalize_pos(
+            M.init_decode_cache(self.cfg, batch, self.max_len), batch)
+
+    def peek_prefix(self, prompt) -> int:
+        """Reusable prefix length in tokens — no staging, no stats."""
+        kv = self._kv
+        if not self.prefix_cache or kv is None:
+            return 0
+        return len(kv.match_prefix(prompt)) * kv.block_size
+
+    def stage_admission(self, prompt) -> tuple[dict, int]:
+        """Build the batch-1 staging cache for chunk-prefilling ``prompt``.
+
+        On a prefix hit the matched pages are gathered into the staging
+        lanes and the fill level advanced — the returned ``skip`` is the
+        number of prompt tokens the engine must NOT prefill.
+        """
+        staging = self.init_staging(1)
+        kv = self._kv
+        if not self.prefix_cache or kv is None:
+            return staging, 0
+        self.stats["prefix_lookups"] += 1
+        pages = kv.match_prefix(prompt)
+        if not pages:
+            return staging, 0
+        skip = len(pages) * kv.block_size
+        self.stats["prefix_hits"] += 1
+        self.stats["reused_prefix_tokens"] += skip
+        return kv.preload_prefix(staging, pages), skip
+
+    def prefix_report(self) -> dict:
+        """Per-drain stats (reset with the slot table) + store occupancy."""
+        kv = self._kv
+        store = kv.store if kv is not None else None
+        return {
+            "enabled": self.prefix_cache,
+            "block_size": self.block_size if store is not None else 0,
+            "stored_blocks": len(store) if store is not None else 0,
+            **self.stats,
+        }

@@ -3,45 +3,52 @@
 The serving surface is request-level: ``Engine.serve(requests)`` takes
 ``GenerationRequest`` objects (per-request ``max_new_tokens`` / ``eos_id`` /
 ``SamplingParams`` / streaming ``on_token`` callback) and returns
-index-aligned ``GenerationResult`` objects. The old batch-synchronous
-``generate(prompts, max_new, eos_id)`` survives only as a deprecated shim
-that constructs greedy requests. Engines are cheap views over a
+index-aligned ``GenerationResult`` objects. Engines are cheap views over a
 ``ServingModel`` — the load-time artifact that pins the attention backend,
 pre-quantizes the W8A8 decode weights, and lays out the dual-layout cache
 specs once (``serve.serving_model``).
 
-The engine holds ONE persistent decode cache of ``slots`` batch lanes and a
-slot table mapping lanes to requests. Sequences retire mid-flight — per-slot
-``max_new_tokens`` budgets and per-request ``eos_id`` free a lane the step it
-finishes — and the head of the pending queue is *chunk-prefilled ahead* into
-a staging cache, then dropped into the next freed lane:
+The decode cache is a typed :class:`repro.serve.cache.CachePool`: the pool
+owns the slot table and one state object per cache family (paged dense KV,
+gemma2 rings, RWKV/Mamba recurrent state, audio cross memory) behind ONE
+protocol — ``alloc``/``insert``/``retire``/``views``/``commit`` — so this
+engine contains no family-specific cache branches. Admission behaviour the
+old engine special-cased per family (ring caches admit via full batch-1
+prefills; recurrent state rejects padded ragged batches) is now an
+:class:`~repro.serve.cache.AdmissionPolicy` the pool derives from its own
+state specs.
+
+Sequences retire mid-flight — per-slot ``max_new_tokens`` budgets and
+per-request ``eos_id`` free a lane the step it finishes — and the head of
+the pending queue is *chunk-prefilled ahead* into a staging cache, then
+dropped into the next freed lane:
 
 * **LBIM**    — the admission chunk is fused into the SAME XLA program as the
   running decode step (``core.interleave.fused_step``; the paper's
   MACT_LDB/MACB_LDT Pbank split), so prefill of ANY pending request overlaps
-  with whatever is decoding, every step. The old engine's wave handoff is the
-  special case where the staged request waits for the whole pool to drain.
+  with whatever is decoding, every step.
 * **HBCEM**   — decode runs at full internal bandwidth (PIM_MAC_FM); the
   admission chunk executes as a separate program in the same engine step.
 * **BLOCKED** — prior-PIM serialization: admission preempts and all decodes
   stall until the pending request is fully loaded.
 
+**Prefix reuse** (``prefix_cache``, default on where the family supports
+it): the pool content-hashes full ``chunk``-token blocks of every admitted
+prompt; a later prompt sharing that block prefix is staged with the shared
+pages *gathered* into its staging cache instead of prefilled, so the chunk
+stream starts at the first un-shared token. Reused tokens are recorded per
+``ScheduleEvent`` and priced by ``pimsim.scheduler.replay_events`` as
+skipped processor prefill; ``schedule_report()`` exposes hit counts and the
+strictly-lower ``prefill_tokens``. Reuse changes the schedule only — greedy
+tokens stay identical to a cold prefill.
+
 All modes emit identical tokens per request — a slot's decode depends only on
 its own cache lane, and sampling randomness is a per-REQUEST RNG lane
-(``sampling.request_key``) that never sees slot indices or admission order —
-so only the schedule differs; ``schedule_report()`` exposes it and
-``pimsim.scheduler.replay_events`` prices it with the calibrated timing
-model (both JSON-exportable via ``to_json()``).
-
-Slot mechanics: free lanes keep flowing through the fixed-shape decode batch
-(their garbage sample is pinned by ``sampling.sample_masked``'s done mask and
-their fill level clamped to 0), a retired lane's KV is left in place behind
-``pos == 0`` (decode attention masks strictly by ``[0, pos)``), and admission
-writes a freshly prefilled batch-1 cache into the lane with
-``model.insert_slot``. Admission chunks are never padded (the final chunk of
-a prompt may be short), so state-carrying families (ssm/hybrid) stream
-through the same path — the old wave engine's equal-length / chunk-aligned
-prompt constraints are gone.
+(``sampling.request_key``) that never sees slot indices or admission order.
+Free lanes keep flowing through the fixed-shape decode batch (their garbage
+sample is pinned by ``sampling.sample_masked``'s done mask; the pool pins
+their fill level to 0 at every ``commit``), and admission chunks are never
+padded, so state-carrying families stream through the same path.
 """
 from __future__ import annotations
 
@@ -60,9 +67,8 @@ from repro.models import model as M
 from repro.serve import sampling
 from repro.serve.api import (FINISH_EOS, FINISH_LENGTH, GenerationRequest,
                              GenerationResult)
+from repro.serve.cache import CachePool
 from repro.serve.serving_model import ServingModel
-
-FREE, ACTIVE = "free", "active"
 
 
 @dataclass
@@ -71,6 +77,7 @@ class ScheduleEvent:
     decode_batch: int       # active decode lanes this step
     prefill_tokens: int     # admission-prefill tokens consumed this step
     decode_ctx: int = 0     # max context (cache fill) among active lanes
+    reused_tokens: int = 0  # prompt tokens served from the prefix store
 
 
 class ScheduleReport(dict):
@@ -84,22 +91,15 @@ class ScheduleReport(dict):
 
 
 @dataclass
-class _Slot:
-    state: str = FREE
-    req: int = -1
-    budget: int = 0         # this request's max_new_tokens
-    emitted: int = 0
-    ctx: int = 0            # prompt length + generated tokens in cache
-
-
-@dataclass
 class _Prefill:
     """One in-flight chunked admission (no lane reserved — it parks when
-    loaded and drops into the next freed slot)."""
+    loaded and drops into the next freed slot). ``off`` starts beyond the
+    prefix-store hit: those tokens are gathered, never prefilled."""
     req: int
     toks: np.ndarray        # (1, n) full prompt
     cache: dict             # batch-1 cache being filled chunk by chunk
     off: int = 0
+    reused: int = 0
 
     @property
     def remaining(self) -> int:
@@ -112,6 +112,7 @@ class _Ready:
     req: int
     cache: dict
     first_tok: int
+    reused: int = 0
 
 
 @dataclass
@@ -124,6 +125,8 @@ class Engine:
     chunk: int = 8
     events: list = field(default_factory=list)
     serving: Optional[ServingModel] = None
+    prefix_cache: bool = True
+    pool: Optional[CachePool] = None
 
     def __post_init__(self) -> None:
         if self.serving is None:
@@ -133,6 +136,21 @@ class Engine:
         self.cfg = self.serving.cfg
         self.params = self.serving.params
         self.max_len = self.serving.max_len
+        if self.pool is None:
+            # prefix blocks align with the admission chunk so a reuse run's
+            # chunk boundaries match a cold run's exactly
+            self.pool = self.serving.cache_pool(
+                slots=self.slots, prefix_cache=self.prefix_cache,
+                block_size=self.chunk)
+        elif self.pool.n_slots != self.slots:
+            raise ValueError(
+                f"pool has {self.pool.n_slots} slots, engine expects {self.slots}")
+        elif self.pool.prefix_cache and self.pool.block_size != self.chunk:
+            # reuse == cold-run token identity rests on shared chunk boundaries
+            raise ValueError(
+                f"pool block_size={self.pool.block_size} must equal engine "
+                f"chunk={self.chunk} when prefix caching is on")
+        self.prefix_cache = self.pool.prefix_cache
 
     # ------------------------------------------------------------------ API
 
@@ -145,6 +163,7 @@ class Engine:
         lane, and — if ``on_token`` is set — streams every emitted token
         synchronously. Results are index-aligned with ``requests``.
         """
+        assert self.serving is not None and self.pool is not None
         reqs = list(requests)
         for r in reqs:
             r.validate(self.max_len)
@@ -157,16 +176,17 @@ class Engine:
         results = [GenerationResult(prompt_len=len(r.prompt)) for r in reqs]
 
         self.events.clear()
-        table = [_Slot() for _ in range(self.slots)]
+        pool = self.pool
+        pool.reset()  # fresh lanes + slot table; the prefix store survives
         queue: list[int] = list(range(n))
-        self._cache = self.serving.init_pool(self.slots)
         cur_tok = np.zeros((self.slots,), np.int32)
         stream: Optional[_Prefill] = None
         ready: Optional[_Ready] = None
+        self._pending_reuse = 0
 
         def emit(si: int, tok: int) -> None:
             """Record one token for slot ``si``; retire the lane when done."""
-            s = table[si]
+            s = pool.get(si)
             r = reqs[s.req]
             results[s.req].tokens.append(tok)
             if r.on_token is not None:
@@ -180,50 +200,48 @@ class Engine:
                 results[s.req].finish_reason = FINISH_LENGTH
             else:
                 return
-            s.state = FREE
-            self._cache = M.reset_slot(self._cache, si)
+            pool.retire(si)
 
-        def place(rdy: _Ready, si: int) -> None:
-            """Drop a fully prefilled request into lane ``si``."""
-            table[si] = _Slot(state=ACTIVE, req=rdy.req,
-                              budget=reqs[rdy.req].max_new_tokens,
-                              ctx=len(reqs[rdy.req].prompt))
-            self._cache = M.insert_slot(self._cache, rdy.cache, si)
+        def place(rdy: _Ready) -> None:
+            """Drop a fully prefilled request into the first freed lane."""
+            si = pool.alloc(reqs[rdy.req], rdy.req, reused_tokens=rdy.reused)
+            pool.insert(si, rdy.cache, prompt=reqs[rdy.req].prompt)
+            results[rdy.req].reused_prefix_tokens = rdy.reused
             cur_tok[si] = rdy.first_tok
             emit(si, rdy.first_tok)
 
         while queue or stream is not None or ready is not None \
-                or any(s.state == ACTIVE for s in table):
+                or pool.has_work():
             # -- a parked request takes the first freed lane
-            if ready is not None:
-                free = [i for i, s in enumerate(table) if s.state == FREE]
-                if free:
-                    place(ready, free[0])
-                    ready = None
-                    continue
-
-            active = [i for i, s in enumerate(table) if s.state == ACTIVE]
-
-            # -- drained pool, nothing staged: batch-prefill straight into lanes
-            if not active and stream is None and queue:
-                cur_tok = self._admit_batch(queue, table, cur_tok, emit)
+            if ready is not None and pool.free_slots():
+                place(ready)
+                ready = None
                 continue
+
+            active = pool.active_slots()
+
+            # -- drained pool, nothing staged: batch-prefill straight into
+            # lanes (prefix-hit requests fall through to the chunk-streaming
+            # path below so their shared blocks are gathered, not recomputed)
+            if not active and stream is None and ready is None and queue:
+                if self._admit_batch(queue, cur_tok, emit):
+                    continue
 
             # -- stage the next pending request (one admission in flight)
             if stream is None and ready is None and queue:
                 r = queue.pop(0)
-                if self._solo_prefill_only():
+                if not pool.policy.chunkable:
                     # ring-cache configs: the W-slot ring is a steady-state
-                    # decode structure and cannot ingest multi-token chunks
-                    # (attention_decode_ring is T==1 by construction), so
-                    # admission is one full batch-1 prefill pass — a
-                    # serialization point in every mode, like the old wave
-                    # handoff but per request.
+                    # decode structure and cannot ingest multi-token chunks,
+                    # so admission is one full batch-1 prefill pass — a
+                    # serialization point in every mode.
                     ready = self._prefill_one(r)
                     continue
+                staging, skip = pool.stage_admission(reqs[r].prompt)
+                self._pending_reuse += skip
                 stream = _Prefill(
                     req=r, toks=np.asarray([reqs[r].prompt], np.int32),
-                    cache=self.serving.init_pool(1))
+                    cache=staging, off=skip, reused=skip)
 
             # starvation-aware admission rate: each FREE lane is wasted decode
             # bandwidth, so the controller lets the processor run a bigger
@@ -234,7 +252,7 @@ class Engine:
             # shapes — and the jit cache — stay bounded by slots + chunk.
             c = 0
             if stream is not None:
-                n_free = sum(1 for s in table if s.state == FREE)
+                n_free = len(pool.free_slots())
                 if stream.remaining >= self.chunk:
                     c = self.chunk * min(max(1, n_free),
                                          stream.remaining // self.chunk)
@@ -243,50 +261,49 @@ class Engine:
             plan = plan_step(self.mode, bool(active), stream is not None, c)
             self.events.append(ScheduleEvent(
                 plan, len(active), c if plan.prefill_chunk else 0,
-                max((table[i].ctx for i in active), default=0)))
+                max((pool.get(i).ctx for i in active), default=0),
+                self._take_reuse()))
 
             dparams = self.serving.decode_params
-            pre_logits = None
+            logits = pre_logits = None
             if plan.fused:
+                assert stream is not None
                 chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
-                logits, self._cache, pre_logits, stream.cache = interleave.fused_step(
-                    dparams, self._cache, jnp.asarray(cur_tok)[:, None],
+                logits, new_cache, pre_logits, stream.cache = interleave.fused_step(
+                    dparams, pool.views(), jnp.asarray(cur_tok)[:, None],
                     stream.cache, chunk_toks, self.cfg)
+                pool.commit(new_cache)
                 stream.off += c
             else:
                 if plan.decode:
-                    logits, self._cache = interleave.decode_only_step(
-                        dparams, self._cache, jnp.asarray(cur_tok)[:, None],
+                    logits, new_cache = interleave.decode_only_step(
+                        dparams, pool.views(), jnp.asarray(cur_tok)[:, None],
                         self.cfg)
+                    pool.commit(new_cache)
                 if plan.prefill_chunk:
+                    assert stream is not None
                     chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
                     pre_logits, stream.cache = interleave.prefill_chunk_step(
                         dparams, stream.cache, chunk_toks, self.cfg)
                     stream.off += c
 
             if plan.decode:
-                tok = self._sample_slots(logits, table, active)
+                tok = self._sample_slots(logits, active)
                 cur_tok = tok.astype(np.int32)
                 for si in active:
                     emit(si, int(tok[si]))
-                # free lanes decode garbage each step; pin their fill level so
-                # the dummy KV write lands at column 0 and never overflows
-                done = np.ones((self.slots,), bool)
-                done[active] = False
-                self._cache["pos"] = jnp.where(
-                    jnp.asarray(done), 0, self._cache["pos"])
 
             if stream is not None and stream.remaining == 0:
                 # chunks are unpadded, so the last chunk's final position IS
                 # the last prompt token — its logits seed the slot's decode.
                 # The loop head places it into the next freed lane.
+                assert pre_logits is not None
                 first = self._first_tokens(pre_logits[:, -1:, :], [stream.req])[0]
-                ready = _Ready(stream.req, stream.cache, first)
+                ready = _Ready(stream.req, stream.cache, first, stream.reused)
                 stream = None
 
-        cache = self._cache
-        del self._cache, self._reqs, self._eos, self._base_keys
-        self.last_cache = cache  # introspection / tests
+        del self._reqs, self._eos, self._base_keys
+        self.last_cache = pool.views()  # introspection / tests
         return results
 
     def generate(self, prompts: list[list[int]],
@@ -310,18 +327,24 @@ class Engine:
                 for p, b in zip(prompts, budgets)]
         return [res.tokens for res in self.serve(reqs)]
 
+    def _take_reuse(self) -> int:
+        r, self._pending_reuse = self._pending_reuse, 0
+        return r
+
     # --------------------------------------------------------------- sampling
 
-    def _sample_slots(self, logits, table, active) -> np.ndarray:
+    def _sample_slots(self, logits, active) -> np.ndarray:
         """One pool-wide sampling step: per-slot params/keys from the table.
 
         When every active lane is greedy (the default), this is a single
         argmax (``greedy_masked`` — sample_masked's temperature=0 fast path):
         no RNG keys are derived and no top-k/top-p filter runs.
         """
+        assert self.pool is not None
+        pool = self.pool
         done = np.ones((self.slots,), bool)
         done[active] = False
-        if all(self._reqs[table[si].req].sampling.temperature <= 0
+        if all(self._reqs[pool.get(si).req].sampling.temperature <= 0
                for si in active):
             return np.asarray(sampling.greedy_masked(logits, jnp.asarray(done)))
         temps = np.zeros((self.slots,), np.float32)
@@ -330,7 +353,7 @@ class Engine:
         keys = np.zeros((self.slots, 2), np.uint32)
         sampled = []
         for si in active:
-            sp = self._reqs[table[si].req].sampling
+            sp = self._reqs[pool.get(si).req].sampling
             temps[si] = sp.temperature
             tks[si] = sp.top_k
             tps[si] = sp.top_p
@@ -339,8 +362,8 @@ class Engine:
         # one batched fold_in for every sampled lane's token key (not one
         # eager dispatch per lane per step)
         keys[np.asarray(sampled)] = np.asarray(jax.vmap(jax.random.fold_in)(
-            jnp.stack([self._base_keys[table[si].req] for si in sampled]),
-            jnp.asarray([table[si].emitted for si in sampled], jnp.uint32)))
+            jnp.stack([self._base_keys[pool.get(si).req] for si in sampled]),
+            jnp.asarray([pool.get(si).emitted for si in sampled], jnp.uint32)))
         return np.asarray(sampling.sample_masked(
             logits, jnp.asarray(done), keys=jnp.asarray(keys),
             temperature=jnp.asarray(temps), top_k=jnp.asarray(tks),
@@ -365,12 +388,6 @@ class Engine:
 
     # ------------------------------------------------------- admission paths
 
-    def _solo_prefill_only(self) -> bool:
-        """Configs whose caches only load correctly via a full batch-1
-        prefill pass: ring-buffer KV (W-slot rings neither chunk-ingest nor
-        tolerate a ragged batch's pad-relative slot placement)."""
-        return M.windowed_cache_applicable(self.cfg)
-
     def _prefill_one(self, r: int) -> _Ready:
         """Full batch-1 prefill of request ``r`` -> a parked ``_Ready``."""
         toks = np.asarray([self._reqs[r].prompt], np.int32)
@@ -381,22 +398,32 @@ class Engine:
             plan_step(self.mode, False, True, toks.shape[1]), 0, toks.shape[1]))
         return _Ready(r, pcache, self._first_tokens(logits, [r])[0])
 
-    def _admit_batch(self, queue, table, cur_tok, emit):
-        """Fill every free lane with one full (ragged) prefill pass.
+    def _admit_batch(self, queue, cur_tok, emit) -> bool:
+        """Fill free lanes with one full (ragged) prefill pass.
 
         Used when nothing is decoding — there is no overlap to exploit, so a
-        single batched prefill is strictly better than chunk streaming.
-        State-carrying families (right-padding corrupts recurrent state) and
-        ring-cache configs (ring slots are placed relative to the PADDED
-        batch length) fall back to per-request passes when lengths are ragged.
+        single batched prefill is strictly better than chunk streaming. The
+        pool's admission policy replaces the old per-family branches: states
+        that cannot ride a right-padded ragged batch (recurrent state, ring
+        placement) fall back to per-request passes when lengths are ragged.
+        Requests whose prompt hits the prefix store are NOT taken — they
+        admit via the chunk-streaming path, which gathers the shared blocks.
+        Returns False when no request was admissible here.
         """
+        assert self.pool is not None
         reqs = self._reqs
-        free = [i for i, s in enumerate(table) if s.state == FREE]
-        take = [queue.pop(0) for _ in range(min(len(free), len(queue)))]
+        pool = self.pool
+        free = pool.free_slots()
+        take: list[int] = []
+        while queue and len(take) < len(free):
+            if pool.peek_prefix(reqs[queue[0]].prompt) > 0:
+                break
+            take.append(queue.pop(0))
+        if not take:
+            return False
         lens = [len(reqs[r].prompt) for r in take]
-        needs_solo = (self.cfg.family in ("ssm", "hybrid")
-                      or self._solo_prefill_only())
-        groups = ([[r] for r in take] if needs_solo and len(set(lens)) > 1
+        groups = ([[r] for r in take]
+                  if not pool.policy.ragged_batch_ok and len(set(lens)) > 1
                   else [take])
         for group in groups:
             glens = [len(reqs[r].prompt) for r in group]
@@ -412,17 +439,16 @@ class Engine:
                 plan_step(self.mode, False, True, sum(glens)), 0, sum(glens)))
             first = self._first_tokens(logits, group)
             for j, r in enumerate(group):
-                si = free.pop(0)
-                table[si] = _Slot(state=ACTIVE, req=r,
-                                  budget=reqs[r].max_new_tokens, ctx=glens[j])
-                self._cache = M.insert_slot(self._cache, pcache, si, src_slot=j)
+                si = pool.alloc(reqs[r], r)
+                pool.insert(si, pcache, src_slot=j, prompt=reqs[r].prompt)
                 cur_tok[si] = first[j]
                 emit(si, first[j])
-        return cur_tok
+        return True
 
     # ------------------------------------------------------------- reporting
 
     def schedule_report(self) -> ScheduleReport:
+        assert self.pool is not None
         fused = sum(1 for e in self.events if e.plan.fused)
         decode_events = [e for e in self.events if e.plan.decode]
         return ScheduleReport({
@@ -434,6 +460,8 @@ class Engine:
             "idle_slot_steps": sum(self.slots - e.decode_batch
                                    for e in decode_events),
             "prefill_tokens": sum(e.prefill_tokens for e in self.events),
+            "reused_prefix_tokens": sum(e.reused_tokens for e in self.events),
+            "prefix": self.pool.prefix_report(),
         })
 
 

@@ -53,7 +53,14 @@ class Scheduler:
     def _pick_mode(self) -> Mode:
         if self.mode_policy != "auto":
             return Mode(self.mode_policy)
-        prefill_work = sum(len(r.prompt) for _, r in self.queue)
+        # prefix-store hits are prefill work the engine will SKIP (shared
+        # blocks are gathered, not recomputed), so they don't count toward
+        # the compute-intensive side of the trade. Conservative: only blocks
+        # already stored are discounted, not intra-queue sharing.
+        pool = self.engine.pool
+        prefill_work = sum(
+            len(r.prompt) - (pool.peek_prefix(r.prompt) if pool is not None else 0)
+            for _, r in self.queue)
         decode_work = sum(r.max_new_tokens for _, r in self.queue)
         # compute-intensive queue (TTFT-dominated) -> overlap with LBIM
         return Mode.LBIM if prefill_work >= decode_work else Mode.HBCEM

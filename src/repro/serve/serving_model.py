@@ -99,20 +99,38 @@ class ServingModel:
 
     def init_pool(self, slots: Optional[int] = None) -> dict:
         """A fresh slot-pool decode cache in the prepared dual layout."""
+        from repro.serve import cache as cache_lib  # deferred: cache imports models
+
         n = self.slots if slots is None else slots
-        return M.normalize_pos(M.init_decode_cache(self.cfg, n, self.max_len), n)
+        return cache_lib.normalize_pos(
+            M.init_decode_cache(self.cfg, n, self.max_len), n)
+
+    def cache_pool(self, *, slots: Optional[int] = None,
+                   prefix_cache: bool = True, block_size: int = 8,
+                   prefix_pages: Optional[int] = None):
+        """A typed :class:`repro.serve.cache.CachePool` over this artifact:
+        slot table + per-family state objects + the content-hashed prefix
+        store, in the prepared dual layout."""
+        from repro.serve.cache import CachePool
+
+        return CachePool(self.cfg, self.max_len,
+                         self.slots if slots is None else slots,
+                         prefix_cache=prefix_cache, block_size=block_size,
+                         prefix_pages=prefix_pages)
 
     def engine(self, *, slots: Optional[int] = None, mode: Mode = Mode.HBCEM,
-               chunk: int = 8):
+               chunk: int = 8, prefix_cache: bool = True):
         """A continuous-batching engine view over this artifact."""
         from repro.serve.engine import Engine  # deferred: engine imports us
 
         return Engine(self.cfg, self.params, max_len=self.max_len,
                       slots=self.slots if slots is None else slots,
-                      mode=mode, chunk=chunk, serving=self)
+                      mode=mode, chunk=chunk, serving=self,
+                      prefix_cache=prefix_cache)
 
     def generate(self, requests: Sequence[GenerationRequest], *,
                  mode: Mode = Mode.HBCEM, slots: Optional[int] = None,
-                 chunk: int = 8) -> list[GenerationResult]:
+                 chunk: int = 8, prefix_cache: bool = True) -> list[GenerationResult]:
         """One-shot convenience: serve ``requests`` through a fresh engine."""
-        return self.engine(slots=slots, mode=mode, chunk=chunk).serve(requests)
+        return self.engine(slots=slots, mode=mode, chunk=chunk,
+                           prefix_cache=prefix_cache).serve(requests)

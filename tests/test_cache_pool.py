@@ -1,0 +1,359 @@
+"""Typed CachePool: lane surgery as an API property, prefix reuse, paging.
+
+Acceptance criteria of the cache-API redesign PR:
+* insert -> retire -> insert round-trips and cross-slot isolation hold for
+  EVERY config family (dense, ring-cache gemma2, rwkv6, zamba2 hybrid)
+  through the one CachePool protocol — no family branches anywhere;
+* zero-on-retire keys are DERIVED from the cache structure (a novel leaf
+  from a future family is zeroed by default — no hardcoded tuple to forget);
+* a shared-prefix workload emits tokens bit-identical to cold prefill across
+  BLOCKED/HBCEM/LBIM while ``schedule_report()`` shows strictly fewer
+  prefill tokens, and the timing model prices the skipped prefill;
+* the block-paged decode-attention path (scalar-prefetch block table) is
+  bit-compatible with the contiguous kernel on both reference and interpret
+  backends;
+* the old ``model.insert_slot``/``reset_slot`` helpers survive only as
+  deprecation shims over the cache module.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim_modes import Mode
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_paged_op)
+from repro.kernels.decode_attention.ref import materialize_pages
+from repro.models import model as M
+from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
+from repro.serve import cache as cache_lib
+from repro.serve.api import GenerationRequest
+from repro.serve.cache import CachePool, derive_state_specs
+from repro.serve.serving_model import ServingModel
+from serving_refs import ref_generate
+
+FAMILY_CONFIGS = {
+    "dense": lambda: get_config("llama3-8b", smoke=True),
+    "ring": lambda: get_config("gemma2-27b", smoke=True).replace(
+        windowed_kv_cache=True, sliding_window=4),
+    "ssm": lambda: get_config("rwkv6-1.6b", smoke=True),
+    "hybrid": lambda: get_config("zamba2-7b", smoke=True),
+}
+MAX_LEN = 32
+
+
+def _prefill_one(cfg, params, prompt):
+    _, cache = M.prefill(params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+                         cfg, MAX_LEN)
+    cache["pos"] = jnp.asarray([len(prompt)], jnp.int32)
+    return cache
+
+
+# ===========================================================================
+# spec derivation
+# ===========================================================================
+
+
+def test_state_specs_per_family():
+    kinds = {name: {s.kind: s for s in derive_state_specs(fn())}
+             for name, fn in FAMILY_CONFIGS.items()}
+    assert set(kinds["dense"]) == {"paged_kv"}
+    assert set(kinds["ring"]) == {"paged_kv", "ring"}
+    assert set(kinds["ssm"]) == {"recurrent"}
+    assert set(kinds["hybrid"]) == {"paged_kv", "recurrent"}
+    # zero-on-retire is a property of the recurrent group ONLY
+    for fam in kinds.values():
+        for kind, spec in fam.items():
+            assert spec.zero_on_retire == (kind == "recurrent")
+    assert kinds["ssm"]["recurrent"].keys == ("att_tail", "ffn_tail", "wkv")
+    assert kinds["hybrid"]["recurrent"].keys == ("conv_bc", "conv_x", "ssd")
+
+
+def test_admission_policy_derived():
+    pol = {name: CachePool(fn(), MAX_LEN, 2).policy
+           for name, fn in FAMILY_CONFIGS.items()}
+    assert pol["dense"].chunkable and pol["dense"].ragged_batch_ok
+    assert pol["dense"].prefix_capable
+    assert not pol["ring"].chunkable          # W-slot rings: solo prefill only
+    for name in ("ring", "ssm", "hybrid"):
+        assert not pol[name].ragged_batch_ok or name == "dense"
+        assert not pol[name].prefix_capable   # KV must be the WHOLE state
+
+
+def test_reset_lane_zeroes_unknown_leaves():
+    """A new family's novel leaf must be zero-on-retire by DEFAULT — the old
+    hardcoded tuple silently leaked anything it didn't name."""
+    cfg = FAMILY_CONFIGS["ssm"]()
+    cache = cache_lib.normalize_pos(M.init_decode_cache(cfg, 2, MAX_LEN), 2)
+    cache["novel_state"] = jnp.ones((cfg.n_layers, 2, 4))
+    cache["wkv"] = jnp.ones_like(cache["wkv"])
+    out = cache_lib.reset_lane(cache, 0)
+    assert float(jnp.sum(jnp.abs(out["novel_state"][:, 0]))) == 0.0
+    assert float(jnp.sum(jnp.abs(out["wkv"][:, 0]))) == 0.0
+    # the OTHER lane is untouched
+    assert float(jnp.min(out["novel_state"][:, 1])) == 1.0
+    assert int(out["pos"][0]) == 0
+
+
+# ===========================================================================
+# lane surgery through the pool, every family
+# ===========================================================================
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_insert_retire_insert_roundtrip(family):
+    cfg = FAMILY_CONFIGS[family]()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pool = CachePool(cfg, MAX_LEN, 3)
+    a = _prefill_one(cfg, params, [1, 2, 3, 4])
+    b = _prefill_one(cfg, params, [9, 8, 7])
+
+    req = GenerationRequest(prompt=[1, 2, 3, 4], max_new_tokens=2)
+    si = pool.alloc(req, rid=0)
+    assert si == 0 and pool.active_slots() == [0]
+    pool.insert(1, a, prompt=[1, 2, 3, 4])  # surgery targets any lane
+    views = pool.views()
+    for key, leaf in views.items():
+        if key == "pos":
+            continue
+        assert jnp.allclose(leaf[:, 1], a[key][:, 0]), (family, key)
+        # cross-slot isolation: untouched lanes stay zero-initialized
+        assert float(jnp.sum(jnp.abs(leaf[:, 2]))) == 0.0, (family, key)
+    assert int(views["pos"][1]) == 4 and int(views["pos"][2]) == 0
+
+    pool.retire(1)
+    views = pool.views()
+    assert int(views["pos"][1]) == 0
+    for spec in pool.specs:
+        for key in spec.keys:
+            lane = views[key][:, 1]
+            if spec.zero_on_retire:
+                assert float(jnp.sum(jnp.abs(lane))) == 0.0, (family, key)
+            else:
+                # KV is masked dead weight behind pos == 0, not cleared
+                assert jnp.allclose(lane, a[key][:, 0]), (family, key)
+
+    pool.insert(1, b, prompt=[9, 8, 7])
+    views = pool.views()
+    for key in (k for s in pool.specs for k in s.keys):
+        assert jnp.allclose(views[key][:, 1], b[key][:, 0]), (family, key)
+    assert int(views["pos"][1]) == 3
+
+
+def test_commit_pins_free_lane_fill():
+    cfg = FAMILY_CONFIGS["dense"]()
+    pool = CachePool(cfg, MAX_LEN, 2)
+    pool.alloc(GenerationRequest(prompt=[1, 2], max_new_tokens=2), rid=0)
+    stepped = dict(pool.views())
+    stepped["pos"] = stepped["pos"] + 1  # a decode step advances EVERY lane
+    pool.commit(stepped)
+    assert int(pool.views()["pos"][0]) == 1   # active lane keeps its fill
+    assert int(pool.views()["pos"][1]) == 0   # free lane pinned back to 0
+
+
+# ===========================================================================
+# prefix reuse: identity + strictly less prefill
+# ===========================================================================
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, ServingModel.prepare(cfg, params, max_len=64, slots=2)
+
+
+SHARED = [7, 3, 9, 4, 11, 2, 6, 8]
+TAILS = [[10 + i, 20 + i, 5] for i in range(5)]
+
+
+@pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
+def test_shared_prefix_matches_cold_prefill(dense_setup, mode):
+    cfg, params, sm = dense_setup
+    prompts = [SHARED + t for t in TAILS]
+    cold = [ref_generate(cfg, params, p, 4) for p in prompts]
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=4) for p in prompts]
+    reports = {}
+    for enabled in (True, False):
+        eng = sm.engine(mode=mode, chunk=4, prefix_cache=enabled)
+        res = eng.serve(reqs)
+        assert [r.tokens for r in res] == cold, (mode, enabled)
+        reports[enabled] = eng.schedule_report()
+        if enabled:
+            assert any(r.reused_prefix_tokens > 0 for r in res)
+            assert all(r.reused_prefix_tokens % eng.chunk == 0 for r in res)
+    # the acceptance inequality: strictly fewer prefill tokens under reuse
+    assert (reports[True]["prefill_tokens"]
+            < reports[False]["prefill_tokens"]), mode
+    assert reports[True]["reused_prefix_tokens"] > 0
+    assert reports[True]["prefix"]["prefix_hits"] > 0
+    assert reports[False]["reused_prefix_tokens"] == 0
+
+
+def test_prefix_reuse_survives_drains(dense_setup):
+    """The store outlives serve() calls: a later drain of the same engine
+    reuses blocks harvested by an earlier one."""
+    cfg, params, sm = dense_setup
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4)
+    first = eng.serve([GenerationRequest(prompt=SHARED + [42], max_new_tokens=2)])
+    assert eng.schedule_report()["reused_prefix_tokens"] == 0
+    second = eng.serve([GenerationRequest(prompt=SHARED + [42], max_new_tokens=2)])
+    rep = eng.schedule_report()
+    assert rep["reused_prefix_tokens"] == 8  # both full blocks of SHARED
+    assert [r.tokens for r in second] == [r.tokens for r in first]
+
+
+def test_replay_prices_skipped_prefill(dense_setup):
+    cfg, params, sm = dense_setup
+    prompts = [SHARED + t for t in TAILS]
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=4) for p in prompts]
+    sims = {}
+    for enabled in (True, False):
+        eng = sm.engine(mode=Mode.HBCEM, chunk=4, prefix_cache=enabled)
+        eng.serve(reqs)
+        sims[enabled] = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
+    assert sims[True].reused_prefill_tokens > 0
+    assert sims[True].prefix_saved_s > 0.0
+    assert sims[True].prefill_busy_s < sims[False].prefill_busy_s
+    assert sims[False].reused_prefill_tokens == 0
+    payload = sims[True].to_json()
+    assert payload["prefix_saved_s"] == pytest.approx(sims[True].prefix_saved_s)
+
+
+def test_disabled_prefix_allocates_no_store():
+    """--no-prefix-cache (or an incapable family) must not pay for page
+    buffers: the store is absent, not merely unused."""
+    pool = CachePool(FAMILY_CONFIGS["dense"](), MAX_LEN, 2, prefix_cache=False)
+    kv = pool._kv
+    assert kv is not None and kv.store is None
+    assert pool.peek_prefix([1, 2, 3, 4, 5]) == 0
+    assert pool.stage_admission([1, 2, 3, 4, 5])[1] == 0
+    assert pool.prefix_report()["stored_blocks"] == 0
+
+
+def test_tiny_store_never_self_evicts_mid_chain():
+    """A store smaller than one prompt's chain must truncate the harvest,
+    not evict its own earlier blocks (which would alias two logical blocks
+    to one physical page in the recorded block table)."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pool = CachePool(cfg, MAX_LEN, 2, block_size=4, prefix_pages=2)
+    prompt = list(range(1, 14))  # 3 full blocks of 4
+    pool.insert(0, _prefill_one(cfg, params, prompt), prompt=prompt)
+    kv = pool._kv
+    assert kv is not None and kv.store is not None
+    table = kv.block_tables[0]
+    live = table[table >= 0]
+    assert len(live) == 2                      # third block truncated
+    assert len(set(live.tolist())) == len(live)  # no aliasing
+    # the stored chain still matches a sharing prompt
+    assert pool.peek_prefix(prompt) == 8
+
+
+def test_prefix_stats_are_per_drain(dense_setup):
+    """prefix_report() resets with the slot table so it stays consistent
+    with the per-serve event stream in schedule_report()."""
+    cfg, params, sm = dense_setup
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4)
+    eng.serve([GenerationRequest(prompt=SHARED + [42], max_new_tokens=2)])
+    eng.serve([GenerationRequest(prompt=SHARED + [42], max_new_tokens=2)])
+    rep = eng.schedule_report()
+    assert rep["prefix"]["reused_prefix_tokens"] == rep["reused_prefix_tokens"] == 8
+    assert rep["prefix"]["prefix_lookups"] == 1
+
+
+def test_engine_rejects_mismatched_pool(dense_setup):
+    cfg, params, sm = dense_setup
+    from repro.serve.engine import Engine
+    with pytest.raises(ValueError, match="slots"):
+        Engine(cfg, params, max_len=64, slots=4, serving=sm,
+               pool=sm.cache_pool(slots=2))
+    with pytest.raises(ValueError, match="block_size"):
+        Engine(cfg, params, max_len=64, slots=2, chunk=4, serving=sm,
+               pool=sm.cache_pool(slots=2, block_size=8))
+
+
+def test_prefix_disabled_for_stateful_families():
+    """Reusing KV alone would drop the recurrent state of skipped tokens —
+    the policy turns reuse off where KV is not the whole cache state."""
+    for name in ("ring", "ssm", "hybrid"):
+        pool = CachePool(FAMILY_CONFIGS[name](), MAX_LEN, 2, prefix_cache=True)
+        assert not pool.prefix_cache, name
+        assert pool.stage_admission([1, 2, 3, 4, 5])[1] == 0
+
+
+# ===========================================================================
+# block-paged decode attention (gather path and scalar-prefetch kernel)
+# ===========================================================================
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_paged_attention_matches_contiguous(use_kernel):
+    rng = np.random.default_rng(0)
+    b, hkv, g, hd, bsz, nb, p = 3, 2, 4, 8, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, hkv * g, hd)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(p, hkv, hd, bsz)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(p, hkv, bsz, hd)), jnp.float32)
+    # pages deliberately scattered AND shared across sequences (prefix reuse)
+    table = np.asarray(rng.permutation(p)[: b * nb].reshape(b, nb), np.int32)
+    table[1, 0] = table[0, 0]
+    table = jnp.asarray(table)
+    pos = jnp.asarray([5, 17, 32], jnp.int32)
+    start = jnp.asarray([0, 3, 10], jnp.int32)  # sliding-window live ranges
+
+    k_c, v_c = materialize_pages(k_pages, v_pages, table)
+    base = decode_attention_op(q, k_c, v_c, pos, start=start, scale=0.35,
+                               softcap=8.0, block_l=bsz, use_kernel=False)
+    out = decode_attention_paged_op(
+        q, k_pages, v_pages, table, pos, start=start, scale=0.35, softcap=8.0,
+        use_kernel=use_kernel, interpret=True)
+    assert jnp.allclose(out, base, atol=1e-4), use_kernel
+    # empty live range (pos == 0) -> defined zero output, like the contiguous op
+    zero = decode_attention_paged_op(
+        q, k_pages, v_pages, table, jnp.zeros((b,), jnp.int32), scale=0.35,
+        use_kernel=use_kernel, interpret=True)
+    assert float(jnp.max(jnp.abs(zero))) == 0.0
+
+
+def test_pagify_gather_roundtrip_is_bit_exact():
+    """Pages preserve the dual layout: extract -> store -> gather returns
+    the exact bits of the contiguous lane span (the identity the prefix
+    store's correctness rests on)."""
+    from repro.core import kv_mapping
+
+    rng = np.random.default_rng(1)
+    nl, h, hd, lmax, bsz = 2, 2, 4, 16, 4
+    k_lane = jnp.asarray(rng.normal(size=(nl, h, hd, lmax)), jnp.bfloat16)
+    v_lane = jnp.asarray(rng.normal(size=(nl, h, lmax, hd)), jnp.bfloat16)
+    pages = kv_mapping.init_paged_cache(nl, 8, h, hd, bsz, jnp.bfloat16)
+    phys = [5, 2, 7]
+    for i, ph in enumerate(phys):
+        kb, vb = kv_mapping.extract_block(k_lane, v_lane, i, bsz)
+        pages = kv_mapping.store_block(pages, ph, kb, vb)
+    k, v = kv_mapping.gather_pages(pages["k_pages"], pages["v_pages"], phys)
+    n = len(phys) * bsz
+    assert (k == k_lane[:, :, :, :n]).all()
+    assert (v == v_lane[:, :, :n, :]).all()
+
+
+# ===========================================================================
+# deprecation shims
+# ===========================================================================
+
+
+def test_model_lane_surgery_shims_warn_and_delegate():
+    cfg = FAMILY_CONFIGS["dense"]()
+    cache = cache_lib.normalize_pos(M.init_decode_cache(cfg, 2, MAX_LEN), 2)
+    src = cache_lib.normalize_pos(M.init_decode_cache(cfg, 1, MAX_LEN), 1)
+    src["pos"] = jnp.asarray([3], jnp.int32)
+    with pytest.deprecated_call():
+        out = M.insert_slot(cache, src, 1)
+    assert int(out["pos"][1]) == 3
+    with pytest.deprecated_call():
+        out = M.reset_slot(out, 1)
+    assert int(out["pos"][1]) == 0
+    with pytest.deprecated_call():
+        assert M.dst_batch(cache) == 2
+    with pytest.deprecated_call():
+        M.normalize_pos(cache, 2)
