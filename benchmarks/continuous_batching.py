@@ -143,3 +143,72 @@ def run(emit, dry_run: bool = False):
         return
     BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
     emit("continuous/bench_json", 0.0, f"wrote {BENCH_JSON}")
+
+
+def run_faults(emit, seed: int = 0):
+    """Seeded chaos smoke: serve the benchmark workload under an injected
+    :class:`FaultPlan` in every mode and PROVE the engine cleans up — every
+    request terminal, no stuck slots, zero leaked prefix pages, and the
+    replay pricing the retries/stalls honestly. Never writes BENCH_JSON
+    (fault runs are resilience evidence, not a perf trajectory)."""
+    from repro.serve.api import TERMINAL_STATES
+    from repro.serve.faults import FaultPlan
+
+    # interpret-pinned so injected kernel faults have a fallback rung to
+    # recover onto (on CPU "auto" already sits at the reference floor)
+    cfg = get_config("llama3-8b", smoke=True).replace(attn_backend="interpret")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size,
+                                          int(rng.integers(3, 10)))))
+               for _ in range(4)]
+    budgets = [int(rng.integers(2, 6)) for _ in range(4)]
+    sm = ServingModel.prepare(cfg, params, max_len=32, slots=2)
+
+    for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
+        plan = FaultPlan.seeded(seed, horizon=16, n_faults=4)
+        eng = sm.engine(mode=mode, chunk=4)
+        eng.fault_plan = plan
+        reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
+        t0 = time.perf_counter()
+        res = eng.serve(reqs)
+        wall = time.perf_counter() - t0
+
+        assert all(r.state in TERMINAL_STATES for r in res), \
+            f"non-terminal request after chaos serve ({mode.value})"
+        occ = eng.pool.occupancy()
+        assert occ.slots_used == 0, f"stuck slot(s) after chaos ({mode.value})"
+        assert occ.prefix_pins == 0, f"leaked page pins ({mode.value})"
+        violations = eng.pool.check_invariants()
+        assert not violations, f"leaked pages/blocks ({mode.value}): {violations}"
+
+        rep = eng.schedule_report()
+        sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
+        emit(f"continuous/faults_{mode.value}", wall * 1e6,
+             f"seed={seed} fired={plan.fired()}/{len(plan.faults)} "
+             f"retried={rep['retried_step_attempts']} "
+             f"degraded_steps={rep['degraded_steps']} "
+             f"stall_ms={sim.stall_s*1e3:.2f} "
+             f"states={[r.state.value for r in res]}")
+    emit("continuous/faults_ok", 0.0, f"seed={seed}: zero leaked pages")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="run the seeded fault-injection smoke instead of "
+                         "the perf comparison (asserts zero leaked pages)")
+    args = ap.parse_args()
+
+    def _emit(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    if args.faults is not None:
+        run_faults(_emit, seed=args.faults)
+    else:
+        run(_emit, dry_run=args.dry_run)

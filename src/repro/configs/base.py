@@ -67,6 +67,10 @@ class ModelConfig:
     attn_backend: str = "auto"        # auto | pallas | interpret | reference | dense
                                       # auto: Pallas decode kernels on TPU, jnp
                                       # oracle elsewhere; dense = legacy einsum
+    gemv_backend: str = ""            # "" -> follow attn_backend; set per-op by
+                                      # the degradation ladder so a faulting
+                                      # PIM-GEMV kernel can fall back without
+                                      # also demoting decode attention
     decode_block_l: int = 512         # L-tile of the decode-attention kernel
     quantized_decode: bool = False    # W8A8 PIM-GEMV for decode-time qkv/o/MLP
                                       # projections (paper's INT8 CU path)

@@ -23,8 +23,28 @@ decode-attention kernel and the pipelined INT8 GEMV are only wins if the
 
 Every routed op keeps a jnp reference fallback so CPU CI produces tokens
 comparable with the TPU path.
+
+**Degradation ladder.** A resilient serving engine must survive a kernel
+that starts failing mid-run (a Pallas lowering regression, a numerics trip
+on one shape) without taking down every in-flight request. The ladder is the
+per-op fallback order
+
+    pallas -> interpret -> reference
+
+walked one rung at a time by :class:`DegradationLadder`: on a kernel
+exception or a NaN/Inf logit-guard trip the engine demotes the implicated op
+(``"decode_attention"`` or ``"pim_gemv"`` — independently, via
+``cfg.gemv_backend``), warns ONCE per transition, counts the event in its
+health counters, and retries the step. Cross-backend token identity is a
+tested property of every rung, so a degraded engine keeps emitting
+bit-identical greedy tokens — only the schedule (and the honest pimsim
+price of the retried, slower steps) changes. ``dense`` and ``reference``
+have no rung below them: a fault there is terminal for the step and the
+engine fails the in-flight requests instead of looping.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -37,19 +57,114 @@ from repro.kernels.pim_gemv.ops import linear_w8a8, linear_w8a8_prequant
 _KERNEL_BACKENDS = ("pallas", "interpret")
 BACKENDS = ("auto", "pallas", "interpret", "reference", "dense")
 
+# fallback order; backends outside the ladder ("dense") have no rung below
+LADDER = ("pallas", "interpret", "reference")
+LADDER_OPS = ("decode_attention", "pim_gemv")
 
-def resolve_backend(cfg) -> str:
+
+def resolve_backend(cfg, op: str = "decode_attention") -> str:
     """Concrete backend for this process (``auto`` keys off the jax platform).
 
-    Unknown names raise immediately — a typo'd backend must not silently
-    serve from the fallback path while the operator believes the kernel ran.
+    ``op`` selects the per-op override: ``"pim_gemv"`` honors
+    ``cfg.gemv_backend`` when set (the degradation ladder demotes the GEMV
+    path independently of decode attention); every other op follows
+    ``cfg.attn_backend``. Unknown names raise immediately — a typo'd backend
+    must not silently serve from the fallback path while the operator
+    believes the kernel ran.
     """
-    if cfg.attn_backend not in BACKENDS:
+    name = cfg.attn_backend
+    if op == "pim_gemv" and getattr(cfg, "gemv_backend", ""):
+        name = cfg.gemv_backend
+    if name not in BACKENDS:
         raise ValueError(
-            f"attn_backend={cfg.attn_backend!r} unknown; expected one of {BACKENDS}")
-    if cfg.attn_backend == "auto":
+            f"attn_backend={name!r} unknown; expected one of {BACKENDS}")
+    if name == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "reference"
-    return cfg.attn_backend
+    return name
+
+
+class DegradationLadder:
+    """Per-op fallback state + health counters for one engine.
+
+    ``apply(cfg)`` pins the current rungs into a config for the next step's
+    (statically-keyed) jit programs; ``degrade(op)`` moves one op down a
+    rung (one-shot warning, counted) and returns False when there is no
+    lower rung — the engine then fails the step's in-flight requests rather
+    than retrying forever. ``record_nan`` / ``record_fault`` feed the health
+    counters ``Engine.health()`` snapshots and ``schedule_report()``
+    surfaces.
+    """
+
+    def __init__(self, cfg):
+        self._base = {op: resolve_backend(cfg, op) for op in LADDER_OPS}
+        self.rung = dict(self._base)
+        self.counters = {op: {"fallbacks": 0, "nan_trips": 0,
+                              "kernel_faults": 0} for op in LADDER_OPS}
+        self._warned: set = set()
+
+    # -------------------------------------------------------------- queries
+
+    def backend(self, op: str) -> str:
+        return self.rung[op]
+
+    def kernel_live(self, op: str) -> bool:
+        """True while the op still executes a kernel lowering (pallas /
+        interpret) — the only rungs where a *kernel* fault can originate."""
+        return self.rung[op] in _KERNEL_BACKENDS
+
+    def is_degraded(self) -> bool:
+        return self.rung != self._base
+
+    def can_degrade(self) -> bool:
+        """True while ANY op still has a rung below its current one."""
+        return any(r in LADDER and r != LADDER[-1] for r in self.rung.values())
+
+    def apply(self, cfg):
+        """Config with the current rungs pinned (identity when undegraded,
+        so the fault-free path keeps its exact jit cache keys)."""
+        if not self.is_degraded():
+            return cfg
+        return cfg.replace(attn_backend=self.rung["decode_attention"],
+                           gemv_backend=self.rung["pim_gemv"])
+
+    # ----------------------------------------------------------- transitions
+
+    def degrade(self, op: str, reason: str = "") -> bool:
+        """Demote ``op`` one rung; False when already at the floor."""
+        cur = self.rung[op]
+        if cur not in LADDER or cur == LADDER[-1]:
+            return False
+        nxt = LADDER[LADDER.index(cur) + 1]
+        self.rung[op] = nxt
+        self.counters[op]["fallbacks"] += 1
+        key = (op, cur, nxt)
+        if key not in self._warned:  # one-shot per transition
+            self._warned.add(key)
+            warnings.warn(
+                f"degrading {op}: {cur} -> {nxt}"
+                f"{' (' + reason + ')' if reason else ''}; subsequent steps "
+                f"run the fallback path (counted in Engine.health())",
+                RuntimeWarning, stacklevel=3)
+        return True
+
+    def degrade_any(self, reason: str = "") -> bool:
+        """Unattributed failure: demote the first op that still has a rung
+        below it (attention first — it dominates the decode step)."""
+        return any(self.degrade(op, reason) for op in LADDER_OPS)
+
+    def record_nan(self, op: str = "decode_attention") -> None:
+        self.counters[op]["nan_trips"] += 1
+
+    def record_fault(self, op: str) -> None:
+        self.counters.setdefault(op, {"fallbacks": 0, "nan_trips": 0,
+                                      "kernel_faults": 0})
+        self.counters[op]["kernel_faults"] += 1
+
+    def health(self) -> dict:
+        """JSON-safe per-op snapshot for ``Engine.health()``."""
+        return {op: {"backend": self.rung.get(op, "?"),
+                     "base": self._base.get(op, "?"), **c}
+                for op, c in self.counters.items()}
 
 
 def use_dispatch(cfg) -> bool:
@@ -133,7 +248,7 @@ def linear(w, x: jax.Array, cfg) -> jax.Array:
     if not _gemv_shaped(cfg, x):
         return x @ raw_weight(w)
     b, t, k = x.shape
-    backend = resolve_backend(cfg)
+    backend = resolve_backend(cfg, op="pim_gemv")
     interpret = backend == "interpret"
     use_kernel = backend in _KERNEL_BACKENDS
     if isinstance(w, PreparedLinear):

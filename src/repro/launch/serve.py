@@ -8,7 +8,10 @@ every request rides its own ``GenerationRequest`` — budget, eos, sampling
 streaming callback printing tokens as they emit. ``--shared-prefix N`` gives
 every request an identical N-token system prompt so ``--prefix-cache`` (on
 by default) demonstrates admission-time reuse; ``--no-prefix-cache``
-disables it for an A/B schedule comparison.
+disables it for an A/B schedule comparison. ``--faults SEED`` injects a
+deterministic chaos plan (see ``repro.serve.faults``) and prints the
+engine's post-run health snapshot; ``--ttft-deadline`` / ``--deadline``
+bound each request in engine steps.
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
 from repro.serve.api import GenerationRequest, SamplingParams
+from repro.serve.faults import FaultPlan
 from repro.serve.serving_model import ServingModel
 
 
@@ -60,6 +64,16 @@ def main() -> None:
                          "to every request (demonstrates prefix reuse)")
     ap.add_argument("--stream", action="store_true",
                     help="print each token the step it is emitted")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic seeded FaultPlan (alloc "
+                         "failures, kernel faults, NaN logits, slow steps) "
+                         "and print the engine's health snapshot after")
+    ap.add_argument("--ttft-deadline", type=int, default=None,
+                    help="per-request first-token deadline in engine steps "
+                         "(missed -> request times out, slot freed)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request total deadline in engine steps "
+                         "(missed -> emitted tokens kept, finish=timeout)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -84,10 +98,13 @@ def main() -> None:
             sampling=SamplingParams(temperature=args.temperature,
                                     top_k=args.top_k, top_p=args.top_p,
                                     seed=args.seed + i),
-            on_token=on_token))
+            on_token=on_token,
+            ttft_deadline=args.ttft_deadline, deadline=args.deadline))
 
     eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk,
                     prefix_cache=args.prefix_cache)
+    if args.faults is not None:
+        eng.fault_plan = FaultPlan.seeded(args.faults)
     t0 = time.perf_counter()
     results = eng.serve(reqs)
     dt = time.perf_counter() - t0
@@ -100,7 +117,9 @@ def main() -> None:
               f"{rep['prefix']['prefix_lookups']} lookups, "
               f"{rep['reused_prefix_tokens']} prefill tokens skipped")
     for i, r in enumerate(results[:3]):
-        print(f"  req{i} ({r.finish_reason}): {r.tokens}")
+        print(f"  req{i} ({r.state.value}/{r.finish_reason}): {r.tokens}")
+    if args.faults is not None or eng.ladder.is_degraded():
+        print(f"health: {eng.health()}")
 
 
 if __name__ == "__main__":

@@ -545,58 +545,10 @@ def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int, src_len: int 
     return jax.eval_shape(lambda: init_decode_cache(cfg, batch, max_len, src_len))
 
 
-# ===========================================================================
-# slot-level cache surgery — MOVED to repro.serve.cache (deprecation shims)
-# ===========================================================================
-#
-# Lane surgery is an attribute of the serving CachePool now: the typed
-# per-family states in ``repro.serve.cache`` own insert/retire semantics
-# (zero-on-retire keys are DERIVED from the cache structure, not hardcoded
-# here). These shims survive exactly one PR for out-of-tree callers.
-
-
-def _lane_surgery_deprecated(name: str) -> None:
-    import warnings
-
-    warnings.warn(
-        f"model.{name} is deprecated; lane surgery lives on "
-        f"repro.serve.cache.CachePool (module functions: insert_lane / "
-        f"reset_lane / normalize_pos / lane_count)",
-        DeprecationWarning, stacklevel=3)
-
-
-def normalize_pos(cache: dict, batch: int) -> dict:
-    """DEPRECATED shim over :func:`repro.serve.cache.normalize_pos`."""
-    _lane_surgery_deprecated("normalize_pos")
-    from repro.serve import cache as cache_lib
-
-    return cache_lib.normalize_pos(cache, batch)
-
-
-def insert_slot(cache: dict, src_cache: dict, slot: int, src_slot: int = 0) -> dict:
-    """DEPRECATED shim over :func:`repro.serve.cache.insert_lane`."""
-    _lane_surgery_deprecated("insert_slot")
-    from repro.serve import cache as cache_lib
-
-    return cache_lib.insert_lane(cache, src_cache, slot, src_slot)
-
-
-def reset_slot(cache: dict, slot: int) -> dict:
-    """DEPRECATED shim over :func:`repro.serve.cache.reset_lane` (which
-    derives zero-on-retire keys from the cache structure instead of this
-    function's old hardcoded recurrent-key tuple)."""
-    _lane_surgery_deprecated("reset_slot")
-    from repro.serve import cache as cache_lib
-
-    return cache_lib.reset_lane(cache, slot)
-
-
-def dst_batch(cache: dict) -> int:
-    """DEPRECATED shim over :func:`repro.serve.cache.lane_count`."""
-    _lane_surgery_deprecated("dst_batch")
-    from repro.serve import cache as cache_lib
-
-    return cache_lib.lane_count(cache)
+# NOTE: the slot-level cache-surgery shims (insert_slot / reset_slot /
+# normalize_pos / dst_batch) that lived here for one release are gone; lane
+# surgery is owned by repro.serve.cache (insert_lane / reset_lane /
+# normalize_pos / lane_count and the typed CachePool states).
 
 
 # ===========================================================================

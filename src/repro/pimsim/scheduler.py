@@ -96,6 +96,9 @@ class ReplayReport:
     overlap_saved_s: float  # serialized cost minus scheduled cost
     reused_prefill_tokens: int = 0  # prompt tokens served from the prefix store
     prefix_saved_s: float = 0.0     # processor prefill time those tokens skip
+    degraded_steps: int = 0      # steps run below their base backend rung
+    retried_attempts: int = 0    # extra (discarded) step attempts re-priced
+    stall_s: float = 0.0         # retry re-execution + slow-step penalties
 
     @property
     def serialized_s(self) -> float:
@@ -111,6 +114,9 @@ class ReplayReport:
             "serialized_s": self.serialized_s,
             "reused_prefill_tokens": self.reused_prefill_tokens,
             "prefix_saved_s": self.prefix_saved_s,
+            "degraded_steps": self.degraded_steps,
+            "retried_attempts": self.retried_attempts,
+            "stall_s": self.stall_s,
         }
 
 
@@ -134,10 +140,17 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
       *gathered* instead of prefilled: they never enter any step's cost, and
       the report prices what they WOULD have cost as ``prefix_saved_s`` —
       the admission-time saving ``BENCH_serving.json`` tracks.
+    * robustness events are priced HONESTLY: a step retried by the
+      degradation ladder (``e.attempts > 1``) re-executes its work per
+      attempt (discarded attempts are paid, not hidden), and injected slow
+      steps (``e.slow_penalty``) stall the timeline by that many extra step
+      times. Both accumulate into ``stall_s``; ``degraded_steps`` counts
+      steps that ran below their base backend rung.
     """
     total = decode_busy = prefill_busy = 0.0
     reused = 0
-    saved = 0.0
+    saved = stall = 0.0
+    degraded_steps = retried = 0
     for e in events:
         r = getattr(e, "reused_tokens", 0)
         if r:
@@ -156,13 +169,21 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
             step, d = max(d_half, p), d_half
         else:
             step, d = d_full + p, d_full
-        total += step
-        decode_busy += d
-        prefill_busy += p
+        attempts = max(getattr(e, "attempts", 1), 1)
+        slow = max(getattr(e, "slow_penalty", 0), 0)
+        waste = step * (attempts - 1) + step * slow
+        total += step + waste
+        stall += waste
+        retried += attempts - 1
+        degraded_steps += 1 if getattr(e, "degraded", False) else 0
+        decode_busy += d * attempts
+        prefill_busy += p * attempts
     return ReplayReport(total_s=total, decode_busy_s=decode_busy,
                         prefill_busy_s=prefill_busy,
                         overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0),
-                        reused_prefill_tokens=reused, prefix_saved_s=saved)
+                        reused_prefill_tokens=reused, prefix_saved_s=saved,
+                        degraded_steps=degraded_steps, retried_attempts=retried,
+                        stall_s=stall)
 
 
 def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:

@@ -3,7 +3,8 @@
 The engine's unit of work used to be a *batch of prompts* (the old
 ``Engine.generate(prompts, max_new, eos_id)`` signature); production serving
 is a stream of heterogeneous requests, each with its own budget, stop
-condition, sampling policy and consumer. These three types are that contract:
+condition, sampling policy, deadline, priority and consumer. These types are
+that contract:
 
 * :class:`SamplingParams` — temperature / top-k / top-p / seed. Greedy is the
   ``temperature=0`` point of the SAME masked-sampling path
@@ -12,23 +13,62 @@ condition, sampling policy and consumer. These three types are that contract:
 * :class:`GenerationRequest` — prompt + ``max_new_tokens`` + per-request
   ``eos_id`` (``None`` defers to ``ModelConfig.eos_id``) + sampling + an
   optional ``on_token`` streaming callback fired synchronously at every
-  emitted token (including the prefill-seeded first token).
-* :class:`GenerationResult` — the emitted tokens and why emission stopped
-  (``"length"`` — budget exhausted — or ``"eos"``).
+  emitted token (including the prefill-seeded first token), plus the
+  robustness fields: ``priority`` (higher preempts lower under pool
+  pressure), ``ttft_deadline`` / ``deadline`` (engine-step budgets enforced
+  at step boundaries — see the request lifecycle below).
+* :class:`GenerationResult` — the emitted tokens, the terminal
+  :class:`RequestState`, and why emission stopped.
+
+**Request lifecycle.** Every request moves through the typed state machine
+
+    QUEUED -> ADMITTED -> RUNNING -> FINISHED
+                  |           |----> TIMED_OUT / CANCELLED / FAILED
+                  |<----------+           (terminal)
+                  (preemption requeues a RUNNING request)
+
+``FINISHED`` keeps the historic ``finish_reason`` of ``"length"`` or
+``"eos"``; the other terminal states mirror their reason strings. A
+preempted request (pool pressure evicted its lane) goes back to ``QUEUED``
+with its emitted tokens kept and resumes bit-identically — resumption
+re-prefills prompt + emitted tokens and continues on the same per-request
+RNG lane at the same emitted-token index.
 
 RNG is a *per-request lane*: the stream of sampling keys is derived from the
 request's own ``seed`` and prompt only — never from the slot index, admission
-order, or global step count — so sibling requests retiring or being admitted
-mid-flight can never perturb another request's tokens (see
+order, or global step count — so sibling requests retiring, failing, or being
+preempted mid-flight can never perturb another request's tokens (see
 ``serve.sampling.request_key``).
 """
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 FINISH_LENGTH = "length"
 FINISH_EOS = "eos"
+FINISH_TIMEOUT = "timeout"
+FINISH_CANCELLED = "cancelled"
+FINISH_FAILED = "failed"
+
+
+class RequestState(str, enum.Enum):
+    """Typed request lifecycle (values are the JSON-safe wire strings)."""
+
+    QUEUED = "queued"        # submitted, no admission work started
+    ADMITTED = "admitted"    # being prefilled / parked for a lane
+    RUNNING = "running"      # holds a decode lane
+    FINISHED = "finished"    # emitted to budget or eos (terminal)
+    FAILED = "failed"        # step failure survived the ladder (terminal)
+    TIMED_OUT = "timed_out"  # ttft/total deadline passed (terminal)
+    CANCELLED = "cancelled"  # cancel(request) honored (terminal)
+
+
+TERMINAL_STATES = frozenset({
+    RequestState.FINISHED, RequestState.FAILED,
+    RequestState.TIMED_OUT, RequestState.CANCELLED,
+})
 
 
 @dataclass(frozen=True)
@@ -56,13 +96,26 @@ GREEDY = SamplingParams()
 
 @dataclass
 class GenerationRequest:
-    """One serving request: admitted into a slot, decoded to its own budget."""
+    """One serving request: admitted into a slot, decoded to its own budget.
+
+    ``priority`` orders preemption only (admission stays FIFO): under pool
+    pressure the lowest-priority RUNNING slot is evicted first, and a parked
+    higher-priority admission may evict a strictly-lower-priority slot.
+    ``ttft_deadline`` / ``deadline`` are engine-step budgets measured from
+    ``serve()`` start and enforced at step boundaries: a request that has
+    not emitted its first token by ``ttft_deadline`` steps, or not reached a
+    terminal state by ``deadline`` steps, is TIMED_OUT (already-emitted
+    tokens are kept).
+    """
 
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None          # None -> ModelConfig.eos_id
     sampling: SamplingParams = field(default_factory=SamplingParams)
     on_token: Optional[Callable[[int], None]] = None  # streaming callback
+    priority: int = 0                     # higher preempts lower
+    ttft_deadline: Optional[int] = None   # engine steps until first token
+    deadline: Optional[int] = None        # engine steps until terminal
 
     def validate(self, max_len: int) -> None:
         if not self.prompt or self.max_new_tokens < 1:
@@ -71,12 +124,23 @@ class GenerationRequest:
             raise ValueError(
                 f"prompt({len(self.prompt)}) + max_new_tokens"
                 f"({self.max_new_tokens}) exceeds max_len={max_len}")
+        for name, dl in (("ttft_deadline", self.ttft_deadline),
+                         ("deadline", self.deadline)):
+            if dl is not None and dl < 1:
+                raise ValueError(f"{name} must be >= 1 engine step, got {dl}")
         self.sampling.validate()
 
 
 @dataclass
 class GenerationResult:
     """Tokens emitted for one request (index-aligned with the request list).
+
+    ``state`` is the request's lifecycle position — terminal after
+    ``serve()`` returns, by engine contract. ``finish_reason`` mirrors it
+    (``"length"``/``"eos"`` for FINISHED; the state's own string otherwise)
+    and ``error`` carries the failure description for FAILED results.
+    ``preemptions`` counts lane evictions this request survived (each one
+    requeued it with its emitted tokens kept; resumption is bit-identical).
 
     ``reused_prefix_tokens`` counts prompt tokens served from the engine's
     content-hashed prefix store (shared system prompts / few-shot headers)
@@ -85,6 +149,13 @@ class GenerationResult:
     """
 
     tokens: list[int] = field(default_factory=list)
-    finish_reason: str = FINISH_LENGTH    # "length" | "eos"
+    finish_reason: str = FINISH_LENGTH    # "length"|"eos"|"timeout"|"cancelled"|"failed"
     prompt_len: int = 0
     reused_prefix_tokens: int = 0
+    state: RequestState = RequestState.QUEUED
+    error: Optional[str] = None           # set for FAILED results
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL_STATES

@@ -55,6 +55,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import kv_mapping
 from repro.models import model as M
+from repro.serve.errors import (EngineStateError, PoolExhausted,
+                                PoolOccupancy)
 
 FREE, ACTIVE = "free", "active"
 
@@ -370,7 +372,10 @@ class PagedKVState(_LaneState):
         """Gather ``pages`` into columns ``[0, n*Bsz)`` of a fresh batch-1
         staging cache and advance its fill level — the chunk prefill then
         starts at the first un-shared token."""
-        assert self.store is not None
+        if self.store is None:
+            raise EngineStateError(
+                "preload_prefix on a PagedKVState with no prefix store "
+                "(prefix caching disabled at pool construction)")
         n = len(pages) * self.store.block
         k, v = self.store.gather(pages)
         out = dict(staging)
@@ -412,6 +417,7 @@ class SlotInfo:
     emitted: int = 0
     ctx: int = 0            # prompt length + generated tokens in cache
     reused_tokens: int = 0  # prompt tokens served from the prefix store
+    priority: int = 0       # preemption order: lowest-priority slot evicts first
 
 
 class CachePool:
@@ -495,18 +501,84 @@ class CachePool:
     def has_work(self) -> bool:
         return any(s.state == ACTIVE for s in self.slots)
 
+    # ----------------------------------------------------------- accounting
+
+    def occupancy(self) -> PoolOccupancy:
+        """Point-in-time capacity snapshot (attached to every
+        :class:`PoolExhausted`, surfaced by ``Engine.health()``)."""
+        kv = self._kv
+        store = kv.store if kv is not None else None
+        pins: set[int] = set()
+        if kv is not None:
+            for si in self.active_slots():
+                pins |= {int(p) for p in kv.block_tables[si] if p >= 0}
+        return PoolOccupancy(
+            slots_total=self.n_slots,
+            slots_used=len(self.active_slots()),
+            pages_total=store.capacity if store is not None else 0,
+            pages_used=len(store) if store is not None else 0,
+            prefix_pins=len(pins),
+        )
+
+    def check_invariants(self) -> list[str]:
+        """Audit cache accounting; returns violation descriptions (empty =
+        healthy). The chaos suite runs this after every fault plan: whatever
+        was injected, retire/preempt paths must leave no leaked lane, no
+        dangling block-table reference, and a store whose free list + index
+        exactly partition its physical pages."""
+        bad: list[str] = []
+        pos = np.asarray(self._pos)
+        for i, s in enumerate(self.slots):
+            if s.state == FREE and int(pos[i]) != 0:
+                bad.append(f"free slot {i} has pos={int(pos[i])} (expected 0)")
+        kv = self._kv
+        if kv is not None:
+            store = kv.store
+            for i, s in enumerate(self.slots):
+                if s.state == FREE and (kv.block_tables[i] >= 0).any():
+                    bad.append(f"free slot {i} still references prefix pages "
+                               f"{sorted(int(p) for p in kv.block_tables[i] if p >= 0)}")
+            if store is not None:
+                live = set(store._index.values())
+                refd = {int(p) for p in kv.block_tables.ravel() if p >= 0}
+                if refd - live:
+                    bad.append(f"block tables reference non-resident pages "
+                               f"{sorted(refd - live)}")
+                claimed = sorted(store._free) + sorted(live)
+                if sorted(claimed) != list(range(store.capacity)):
+                    bad.append(
+                        f"store free list + index do not partition "
+                        f"{store.capacity} pages (free={len(store._free)}, "
+                        f"indexed={len(live)}, "
+                        f"overlap={sorted(set(store._free) & live)})")
+        return bad
+
     # -------------------------------------------------------------- protocol
 
-    def alloc(self, request: Any, rid: int, *, reused_tokens: int = 0) -> int:
-        """Claim the first free lane for ``request`` (a GenerationRequest)."""
+    def alloc(self, request: Any, rid: int, *, reused_tokens: int = 0,
+              ctx: Optional[int] = None, emitted: int = 0,
+              priority: Optional[int] = None) -> int:
+        """Claim the first free lane for ``request`` (a GenerationRequest).
+
+        The keyword overrides exist for preemption resume: a requeued request
+        re-enters with ``ctx`` covering prompt + already-emitted tokens and
+        ``emitted`` at its absolute emitted-token count, so budget accounting
+        and the per-request RNG lane (keys indexed by emitted position)
+        continue exactly where eviction cut them off.
+        """
         free = self.free_slots()
         if not free:
-            raise RuntimeError("CachePool.alloc: no free slot")
+            raise PoolExhausted("CachePool.alloc: no free slot",
+                                self.occupancy())
         si = free[0]
-        self.slots[si] = SlotInfo(state=ACTIVE, req=rid,
-                                  budget=request.max_new_tokens,
-                                  ctx=len(request.prompt),
-                                  reused_tokens=reused_tokens)
+        self.slots[si] = SlotInfo(
+            state=ACTIVE, req=rid,
+            budget=request.max_new_tokens,
+            emitted=emitted,
+            ctx=len(request.prompt) if ctx is None else ctx,
+            reused_tokens=reused_tokens,
+            priority=getattr(request, "priority", 0) if priority is None
+            else priority)
         return si
 
     def insert(self, slot: int, prefilled: dict, *, src_slot: int = 0,

@@ -62,12 +62,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import interleave
+from repro.core.dispatch import DegradationLadder
 from repro.core.pim_modes import Mode, StepPlan, plan_step
 from repro.models import model as M
 from repro.serve import sampling
-from repro.serve.api import (FINISH_EOS, FINISH_LENGTH, GenerationRequest,
-                             GenerationResult)
+from repro.serve.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_FAILED,
+                             FINISH_LENGTH, FINISH_TIMEOUT, TERMINAL_STATES,
+                             GenerationRequest, GenerationResult, RequestState)
 from repro.serve.cache import CachePool
+from repro.serve.errors import EngineStateError, KernelFault, PoolExhausted
+from repro.serve.faults import FaultPlan
 from repro.serve.serving_model import ServingModel
 
 
@@ -78,6 +82,9 @@ class ScheduleEvent:
     prefill_tokens: int     # admission-prefill tokens consumed this step
     decode_ctx: int = 0     # max context (cache fill) among active lanes
     reused_tokens: int = 0  # prompt tokens served from the prefix store
+    attempts: int = 1       # 1 + ladder retries this step (pimsim prices all)
+    slow_penalty: int = 0   # injected slow-step clock penalty (engine steps)
+    degraded: bool = False  # step ran below its base backend rungs
 
 
 class ScheduleReport(dict):
@@ -88,6 +95,20 @@ class ScheduleReport(dict):
         out = dict(self)
         out["modes"] = sorted(out["modes"])
         return out
+
+
+def _finite(logits, active, pre_logits) -> bool:
+    """NaN/Inf logit guard: only positions that can become tokens are
+    checked — ACTIVE decode lanes (free lanes decode garbage by design) and
+    the admission chunk's final position (the one that seeds a first token).
+    """
+    if logits is not None and active:
+        if not np.isfinite(np.asarray(logits)[np.asarray(active)]).all():
+            return False
+    if pre_logits is not None:
+        if not np.isfinite(np.asarray(pre_logits[:, -1:, :])).all():
+            return False
+    return True
 
 
 @dataclass
@@ -108,11 +129,16 @@ class _Prefill:
 
 @dataclass
 class _Ready:
-    """A fully prefilled request parked until a lane frees."""
+    """A fully prefilled request parked until a lane frees. ``prompt``/``ctx``
+    describe the *staged* token span — for a preempted request that is
+    prompt + already-emitted tokens, so resume accounting (and the prefix
+    harvest) covers everything actually in the lane."""
     req: int
     cache: dict
     first_tok: int
     reused: int = 0
+    prompt: list = field(default_factory=list)
+    ctx: int = 0
 
 
 @dataclass
@@ -127,6 +153,11 @@ class Engine:
     serving: Optional[ServingModel] = None
     prefix_cache: bool = True
     pool: Optional[CachePool] = None
+    # --- robustness knobs -------------------------------------------------
+    fault_plan: Optional[FaultPlan] = None  # deterministic chaos injection
+    nan_guard: bool = True                  # finite-logits check per step
+    max_step_attempts: int = 4              # ladder retries before step fails
+    step_limit: Optional[int] = None        # watchdog; None -> sized from work
 
     def __post_init__(self) -> None:
         if self.serving is None:
@@ -151,6 +182,23 @@ class Engine:
                 f"pool block_size={self.pool.block_size} must equal engine "
                 f"chunk={self.chunk} when prefix caching is on")
         self.prefix_cache = self.pool.prefix_cache
+        # sticky across serve() calls: a kernel that faulted stays demoted,
+        # and health counters accumulate for the engine's lifetime
+        self.ladder = DegradationLadder(self.cfg)
+        self._health = {"preemptions": 0, "timeouts": 0, "cancellations": 0,
+                        "failures": 0, "retried_steps": 0, "injected_faults": 0}
+        self._in_serve = False
+        self._cancel: set = set()
+
+    def _require(self, cond: bool, msg: str) -> None:
+        """Engine state-machine invariant (EngineStateError, not assert —
+        survives ``python -O`` and tells the caller what was violated)."""
+        if not cond:
+            raise EngineStateError(msg)
+
+    def _push_event(self, ev: ScheduleEvent) -> None:
+        self.events.append(ev)
+        self._clock += 1 + ev.slow_penalty
 
     # ------------------------------------------------------------------ API
 
@@ -161,9 +209,25 @@ class Engine:
         the step it emits its ``eos_id`` (defaulting to the config's; the
         EOS token is included in the output), samples on its private RNG
         lane, and — if ``on_token`` is set — streams every emitted token
-        synchronously. Results are index-aligned with ``requests``.
+        synchronously. Results are index-aligned with ``requests``; on
+        return every result is in a TERMINAL state (engine contract — no
+        request is ever left hanging, whatever faulted mid-run).
+
+        Robustness semantics (see README "Failure semantics"):
+
+        * deadlines (``ttft_deadline``/``deadline``, engine steps from serve
+          start) and :meth:`cancel` are enforced at step boundaries;
+        * lane pressure preempts the lowest-priority RUNNING slot — the
+          victim requeues with its emitted tokens and resumes bit-identically
+          (re-prefill of prompt + emitted tokens on the same RNG lane);
+        * a kernel exception or NaN/Inf logit trip demotes the implicated op
+          down the dispatch ladder and retries the step; only ladder
+          exhaustion fails the step's in-flight requests (others continue).
         """
-        assert self.serving is not None and self.pool is not None
+        self._require(self.serving is not None and self.pool is not None,
+                      "Engine not prepared: serving artifact / cache pool "
+                      "missing (construct via Engine(cfg, params) or "
+                      "ServingModel.engine())")
         reqs = list(requests)
         for r in reqs:
             r.validate(self.max_len)
@@ -174,15 +238,33 @@ class Engine:
         self._base_keys = [sampling.request_key(r.sampling.seed, r.prompt)
                            for r in reqs]
         results = [GenerationResult(prompt_len=len(r.prompt)) for r in reqs]
+        self._results = results
 
         self.events.clear()
         pool = self.pool
+        ladder = self.ladder
+        H = self._health
+        faults = self.fault_plan
+        if faults is not None:
+            for f in faults.faults:  # a plan replays identically per serve
+                f.fired = False
         pool.reset()  # fresh lanes + slot table; the prefix store survives
         queue: list[int] = list(range(n))
         cur_tok = np.zeros((self.slots,), np.int32)
         stream: Optional[_Prefill] = None
         ready: Optional[_Ready] = None
         self._pending_reuse = 0
+        self._clock = 0
+        self._cancel.clear()
+        self._in_serve = True
+        iters = 0
+        limit = self.step_limit if self.step_limit is not None else (
+            64 + 8 * sum(len(r.prompt) + r.max_new_tokens for r in reqs))
+
+        def ext_prompt(r: int) -> list[int]:
+            """Admission token span: prompt + already-emitted tokens, so a
+            preempted request resumes exactly where eviction cut it off."""
+            return list(reqs[r].prompt) + results[r].tokens
 
         def emit(si: int, tok: int) -> None:
             """Record one token for slot ``si``; retire the lane when done."""
@@ -200,25 +282,131 @@ class Engine:
                 results[s.req].finish_reason = FINISH_LENGTH
             else:
                 return
+            results[s.req].state = RequestState.FINISHED
             pool.retire(si)
 
-        def place(rdy: _Ready) -> None:
-            """Drop a fully prefilled request into the first freed lane."""
-            si = pool.alloc(reqs[rdy.req], rdy.req, reused_tokens=rdy.reused)
-            pool.insert(si, rdy.cache, prompt=reqs[rdy.req].prompt)
-            results[rdy.req].reused_prefix_tokens = rdy.reused
+        def preempt(si: int) -> None:
+            """Evict lane ``si`` under pressure: retire (pages released),
+            requeue at the head with emitted tokens kept. Resumption is
+            bit-identical by the per-request RNG-lane contract."""
+            r = pool.get(si).req
+            pool.retire(si)
+            H["preemptions"] += 1
+            results[r].preemptions += 1
+            results[r].state = RequestState.QUEUED
+            queue.insert(0, r)
+
+        def alloc_guarded(rdy: _Ready) -> int:
+            """``pool.alloc`` with injected-exhaustion + preemption healing."""
+            r = rdy.req
+            injected = (faults is not None and
+                        faults.take(self._clock, "alloc_fail") is not None)
+            if injected:
+                H["injected_faults"] += 1  # models fragmentation/contention
+            else:
+                try:
+                    return pool.alloc(reqs[r], r, reused_tokens=rdy.reused,
+                                      ctx=rdy.ctx,
+                                      emitted=len(results[r].tokens))
+                except PoolExhausted:
+                    pass
+            # exhausted (injected or real): preempt the lowest-priority
+            # active slot the incoming request outranks-or-ties
+            victims = sorted(
+                (pool.get(si).priority, si) for si in pool.active_slots()
+                if pool.get(si).priority <= reqs[r].priority)
+            if not victims:
+                return -1  # stays parked; retried next boundary
+            preempt(victims[0][1])
+            return pool.alloc(reqs[r], r, reused_tokens=rdy.reused,
+                              ctx=rdy.ctx, emitted=len(results[r].tokens))
+
+        def place(rdy: _Ready) -> bool:
+            """Drop a fully prefilled request into a lane (False: parked)."""
+            si = alloc_guarded(rdy)
+            if si < 0:
+                return False
+            pool.insert(si, rdy.cache, prompt=rdy.prompt or None)
+            results[rdy.req].reused_prefix_tokens += rdy.reused
+            results[rdy.req].state = RequestState.RUNNING
             cur_tok[si] = rdy.first_tok
             emit(si, rdy.first_tok)
+            return True
+
+        def evict(r: int, state: RequestState, reason: str,
+                  error: Optional[str] = None) -> None:
+            """Force request ``r`` terminal wherever it currently lives."""
+            nonlocal stream, ready
+            if results[r].state in TERMINAL_STATES:
+                return
+            if r in queue:
+                queue.remove(r)
+            if stream is not None and stream.req == r:
+                stream = None
+            if ready is not None and ready.req == r:
+                ready = None
+            for si in pool.active_slots():
+                if pool.get(si).req == r:
+                    pool.retire(si)
+            results[r].state = state
+            results[r].finish_reason = reason
+            results[r].error = error
+
+        def sweep() -> None:
+            """Step-boundary enforcement: cancellations, then deadlines."""
+            for r in sorted(self._cancel):
+                if results[r].state not in TERMINAL_STATES:
+                    evict(r, RequestState.CANCELLED, FINISH_CANCELLED)
+                    H["cancellations"] += 1
+            self._cancel.clear()
+            for r in range(n):
+                if results[r].state in TERMINAL_STATES:
+                    continue
+                rq = reqs[r]
+                if (rq.ttft_deadline is not None and not results[r].tokens
+                        and self._clock >= rq.ttft_deadline):
+                    evict(r, RequestState.TIMED_OUT, FINISH_TIMEOUT,
+                          f"no first token by ttft_deadline="
+                          f"{rq.ttft_deadline} (step {self._clock})")
+                    H["timeouts"] += 1
+                elif rq.deadline is not None and self._clock >= rq.deadline:
+                    evict(r, RequestState.TIMED_OUT, FINISH_TIMEOUT,
+                          f"not finished by deadline={rq.deadline} "
+                          f"(step {self._clock})")
+                    H["timeouts"] += 1
 
         while queue or stream is not None or ready is not None \
                 or pool.has_work():
+            iters += 1
+            if iters > limit:
+                for r in range(n):  # watchdog: nothing hangs, ever
+                    if results[r].state not in TERMINAL_STATES:
+                        evict(r, RequestState.FAILED, FINISH_FAILED,
+                              f"watchdog: step limit {limit} exceeded")
+                        H["failures"] += 1
+                break
+            sweep()
+
             # -- a parked request takes the first freed lane
             if ready is not None and pool.free_slots():
-                place(ready)
-                ready = None
+                if place(ready):
+                    ready = None
                 continue
 
+            # -- priority preemption: a parked admission outranking a
+            # running slot evicts the lowest-priority strict underdog
+            if ready is not None:
+                victims = sorted(
+                    (pool.get(si).priority, si) for si in pool.active_slots()
+                    if pool.get(si).priority < reqs[ready.req].priority)
+                if victims:
+                    preempt(victims[0][1])
+                    continue
+
             active = pool.active_slots()
+            if not (queue or stream is not None or ready is not None
+                    or active):
+                break  # sweep() emptied the engine
 
             # -- drained pool, nothing staged: batch-prefill straight into
             # lanes (prefix-hit requests fall through to the chunk-streaming
@@ -230,6 +418,8 @@ class Engine:
             # -- stage the next pending request (one admission in flight)
             if stream is None and ready is None and queue:
                 r = queue.pop(0)
+                results[r].state = RequestState.ADMITTED
+                p = ext_prompt(r)
                 if not pool.policy.chunkable:
                     # ring-cache configs: the W-slot ring is a steady-state
                     # decode structure and cannot ingest multi-token chunks,
@@ -237,10 +427,10 @@ class Engine:
                     # serialization point in every mode.
                     ready = self._prefill_one(r)
                     continue
-                staging, skip = pool.stage_admission(reqs[r].prompt)
+                staging, skip = pool.stage_admission(p)
                 self._pending_reuse += skip
                 stream = _Prefill(
-                    req=r, toks=np.asarray([reqs[r].prompt], np.int32),
+                    req=r, toks=np.asarray([p], np.int32),
                     cache=staging, off=skip, reused=skip)
 
             # starvation-aware admission rate: each FREE lane is wasted decode
@@ -259,33 +449,120 @@ class Engine:
                 else:
                     c = stream.remaining
             plan = plan_step(self.mode, bool(active), stream is not None, c)
-            self.events.append(ScheduleEvent(
+
+            # ---- guarded step execution: compute WITHOUT mutating pool or
+            # stream; on a kernel exception or NaN/Inf trip, demote the
+            # implicated op down the dispatch ladder and retry. Commit only
+            # a clean step's outputs — a retried step never double-appends.
+            dparams = self.serving.decode_params
+            logits = pre_logits = new_cache = new_scache = None
+            attempts, step_ok = 0, False
+            while attempts < self.max_step_attempts:
+                attempts += 1
+                cfg_step = ladder.apply(self.cfg)
+                try:
+                    if faults is not None:
+                        f = faults.take(self._clock, "kernel_exc",
+                                        pred=lambda f: ladder.kernel_live(f.op))
+                        if f is not None:
+                            H["injected_faults"] += 1
+                            raise KernelFault(f.op, injected=True)
+                    logits = pre_logits = new_cache = new_scache = None
+                    if plan.fused:
+                        self._require(stream is not None,
+                                      "fused step planned without an "
+                                      "admission stream in flight")
+                        chunk_toks = jnp.asarray(
+                            stream.toks[:, stream.off:stream.off + c])
+                        logits, new_cache, pre_logits, new_scache = \
+                            interleave.fused_step(
+                                dparams, pool.views(),
+                                jnp.asarray(cur_tok)[:, None],
+                                stream.cache, chunk_toks, cfg_step)
+                    else:
+                        if plan.decode:
+                            logits, new_cache = interleave.decode_only_step(
+                                dparams, pool.views(),
+                                jnp.asarray(cur_tok)[:, None], cfg_step)
+                        if plan.prefill_chunk:
+                            self._require(stream is not None,
+                                          "prefill chunk planned without an "
+                                          "admission stream in flight")
+                            chunk_toks = jnp.asarray(
+                                stream.toks[:, stream.off:stream.off + c])
+                            pre_logits, new_scache = \
+                                interleave.prefill_chunk_step(
+                                    dparams, stream.cache, chunk_toks,
+                                    cfg_step)
+                    if faults is not None:
+                        f = faults.take(self._clock, "nan_logits",
+                                        pred=lambda _: ladder.can_degrade())
+                        if f is not None:
+                            H["injected_faults"] += 1
+                            bad = jnp.float32(jnp.nan)
+                            if logits is not None:
+                                logits = logits * bad
+                            elif pre_logits is not None:
+                                pre_logits = pre_logits * bad
+                    if self.nan_guard and not _finite(logits, active,
+                                                      pre_logits):
+                        ladder.record_nan()
+                        raise KernelFault(
+                            "decode_attention",
+                            "non-finite logits (NaN/Inf guard trip)")
+                    step_ok = True
+                    break
+                except EngineStateError:
+                    raise
+                except Exception as e:  # noqa: BLE001 — the ladder IS the handler
+                    H["retried_steps"] += 1
+                    if isinstance(e, KernelFault):
+                        ladder.record_fault(e.op)
+                        recovered = (ladder.degrade(e.op, str(e))
+                                     or ladder.degrade_any(str(e)))
+                    else:
+                        recovered = ladder.degrade_any(
+                            f"{type(e).__name__}: {e}")
+                    if not recovered:
+                        break  # ladder exhausted: the step fails
+
+            slow = 0
+            if faults is not None:
+                f = faults.take(self._clock, "slow_step")
+                if f is not None:
+                    H["injected_faults"] += 1
+                    slow = f.penalty
+            self._push_event(ScheduleEvent(
                 plan, len(active), c if plan.prefill_chunk else 0,
                 max((pool.get(i).ctx for i in active), default=0),
-                self._take_reuse()))
+                self._take_reuse(), attempts=attempts, slow_penalty=slow,
+                degraded=ladder.is_degraded()))
 
-            dparams = self.serving.decode_params
-            logits = pre_logits = None
-            if plan.fused:
-                assert stream is not None
-                chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
-                logits, new_cache, pre_logits, stream.cache = interleave.fused_step(
-                    dparams, pool.views(), jnp.asarray(cur_tok)[:, None],
-                    stream.cache, chunk_toks, self.cfg)
+            if not step_ok:
+                # fail ONLY the step's participants; parked/queued requests
+                # and the engine itself keep serving
+                H["failures"] += 1
+                err = (f"step failed after {attempts} attempts "
+                       f"(degradation ladder exhausted)")
+                for si in list(pool.active_slots()):
+                    r = pool.get(si).req
+                    pool.retire(si)
+                    results[r].state = RequestState.FAILED
+                    results[r].finish_reason = FINISH_FAILED
+                    results[r].error = err
+                if stream is not None:
+                    results[stream.req].state = RequestState.FAILED
+                    results[stream.req].finish_reason = FINISH_FAILED
+                    results[stream.req].error = err
+                    stream = None
+                continue
+
+            if new_cache is not None:
                 pool.commit(new_cache)
+            if new_scache is not None:
+                self._require(stream is not None, "stream vanished mid-step")
+                stream.cache = new_scache
                 stream.off += c
-            else:
-                if plan.decode:
-                    logits, new_cache = interleave.decode_only_step(
-                        dparams, pool.views(), jnp.asarray(cur_tok)[:, None],
-                        self.cfg)
-                    pool.commit(new_cache)
-                if plan.prefill_chunk:
-                    assert stream is not None
-                    chunk_toks = jnp.asarray(stream.toks[:, stream.off:stream.off + c])
-                    pre_logits, stream.cache = interleave.prefill_chunk_step(
-                        dparams, stream.cache, chunk_toks, self.cfg)
-                    stream.off += c
 
             if plan.decode:
                 tok = self._sample_slots(logits, active)
@@ -297,14 +574,45 @@ class Engine:
                 # chunks are unpadded, so the last chunk's final position IS
                 # the last prompt token — its logits seed the slot's decode.
                 # The loop head places it into the next freed lane.
-                assert pre_logits is not None
-                first = self._first_tokens(pre_logits[:, -1:, :], [stream.req])[0]
-                ready = _Ready(stream.req, stream.cache, first, stream.reused)
+                self._require(pre_logits is not None,
+                              "admission stream drained without prefill "
+                              "logits to seed its first token")
+                r = stream.req
+                first = self._first_tokens(
+                    pre_logits[:, -1:, :], [r],
+                    offsets=[len(results[r].tokens)])[0]
+                ready = _Ready(r, stream.cache, first, stream.reused,
+                               prompt=[int(t) for t in stream.toks[0]],
+                               ctx=int(stream.toks.shape[1]))
                 stream = None
 
+        self._in_serve = False
+        for r in range(n):  # terminal contract: nothing is left in flight
+            if results[r].state not in TERMINAL_STATES:
+                results[r].state = RequestState.FAILED
+                results[r].finish_reason = FINISH_FAILED
+                results[r].error = (results[r].error
+                                    or "engine exited with request "
+                                       "non-terminal")
+                H["failures"] += 1
         del self._reqs, self._eos, self._base_keys
         self.last_cache = pool.views()  # introspection / tests
         return results
+
+    def cancel(self, request_index: int) -> None:
+        """Cancel an in-flight request (index into the ``serve()`` request
+        list). Valid only while ``serve()`` is running — call it from an
+        ``on_token`` callback or another thread; it takes effect at the next
+        step boundary and keeps already-emitted tokens."""
+        if not self._in_serve:
+            raise EngineStateError(
+                "cancel() is only valid while serve() is running — request "
+                "indices are scoped to the in-flight call")
+        if not 0 <= request_index < len(self._reqs):
+            raise EngineStateError(
+                f"cancel({request_index}): no such request in the in-flight "
+                f"serve ({len(self._reqs)} requests)")
+        self._cancel.add(request_index)
 
     def generate(self, prompts: list[list[int]],
                  max_new: Union[int, Sequence[int]] = 16,
@@ -340,7 +648,7 @@ class Engine:
         argmax (``greedy_masked`` — sample_masked's temperature=0 fast path):
         no RNG keys are derived and no top-k/top-p filter runs.
         """
-        assert self.pool is not None
+        self._require(self.pool is not None, "sampling without a pool")
         pool = self.pool
         done = np.ones((self.slots,), bool)
         done[active] = False
@@ -369,16 +677,23 @@ class Engine:
             temperature=jnp.asarray(temps), top_k=jnp.asarray(tks),
             top_p=jnp.asarray(tps)))
 
-    def _first_tokens(self, logits, rids: list[int]) -> list[int]:
-        """Sample each request's prefill-seeded first token (lane index 0)."""
+    def _first_tokens(self, logits, rids: list[int],
+                      offsets: Optional[list[int]] = None) -> list[int]:
+        """Sample each request's prefill-seeded first token.
+
+        ``offsets`` are the requests' absolute emitted-token indices — 0 on
+        first admission, the emitted count on a preemption resume, so the
+        RNG-lane key stream continues exactly where eviction cut it off.
+        """
         g = len(rids)
+        offs = offsets if offsets is not None else [0] * g
         sps = [self._reqs[r].sampling for r in rids]
         if all(sp.temperature <= 0 for sp in sps):
             return [int(t) for t in np.asarray(sampling.greedy(logits))]
         keys = np.stack([
-            np.asarray(sampling.token_key(self._base_keys[r], 0))
+            np.asarray(sampling.token_key(self._base_keys[r], off))
             if sp.temperature > 0 else np.zeros((2,), np.uint32)
-            for r, sp in zip(rids, sps)]).astype(np.uint32)
+            for r, sp, off in zip(rids, sps, offs)]).astype(np.uint32)
         tok = sampling.sample_masked(
             logits, jnp.zeros((g,), bool), keys=jnp.asarray(keys),
             temperature=jnp.asarray([sp.temperature for sp in sps], jnp.float32),
@@ -389,14 +704,21 @@ class Engine:
     # ------------------------------------------------------- admission paths
 
     def _prefill_one(self, r: int) -> _Ready:
-        """Full batch-1 prefill of request ``r`` -> a parked ``_Ready``."""
-        toks = np.asarray([self._reqs[r].prompt], np.int32)
+        """Full batch-1 prefill of request ``r`` -> a parked ``_Ready``.
+
+        The prefilled span is prompt + already-emitted tokens, so a preempted
+        ring-family request resumes through the same path it was admitted by.
+        """
+        p = list(self._reqs[r].prompt) + self._results[r].tokens
+        toks = np.asarray([p], np.int32)
         logits, pcache = M.prefill(
             self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len)
         pcache["pos"] = jnp.asarray([toks.shape[1]], jnp.int32)
-        self.events.append(ScheduleEvent(
+        self._push_event(ScheduleEvent(
             plan_step(self.mode, False, True, toks.shape[1]), 0, toks.shape[1]))
-        return _Ready(r, pcache, self._first_tokens(logits, [r])[0])
+        first = self._first_tokens(logits, [r],
+                                   offsets=[len(self._results[r].tokens)])[0]
+        return _Ready(r, pcache, first, prompt=p, ctx=len(p))
 
     def _admit_batch(self, queue, cur_tok, emit) -> bool:
         """Fill free lanes with one full (ragged) prefill pass.
@@ -408,47 +730,75 @@ class Engine:
         placement) fall back to per-request passes when lengths are ragged.
         Requests whose prompt hits the prefix store are NOT taken — they
         admit via the chunk-streaming path, which gathers the shared blocks.
-        Returns False when no request was admissible here.
+        Returns False when no request was admissible here (including an
+        injected alloc failure: the queue head then admits via the
+        chunk-streaming path, the engine's recovery route).
         """
-        assert self.pool is not None
+        self._require(self.pool is not None, "batch admission without a pool")
         reqs = self._reqs
+        results = self._results
         pool = self.pool
+        if (self.fault_plan is not None and
+                self.fault_plan.take(self._clock, "alloc_fail") is not None):
+            self._health["injected_faults"] += 1
+            return False
         free = pool.free_slots()
+        ext = {r: list(reqs[r].prompt) + results[r].tokens for r in queue}
         take: list[int] = []
         while queue and len(take) < len(free):
-            if pool.peek_prefix(reqs[queue[0]].prompt) > 0:
+            if pool.peek_prefix(ext[queue[0]]) > 0:
                 break
             take.append(queue.pop(0))
         if not take:
             return False
-        lens = [len(reqs[r].prompt) for r in take]
+        lens = [len(ext[r]) for r in take]
         groups = ([[r] for r in take]
                   if not pool.policy.ragged_batch_ok and len(set(lens)) > 1
                   else [take])
         for group in groups:
-            glens = [len(reqs[r].prompt) for r in group]
+            for r in group:
+                results[r].state = RequestState.ADMITTED
+            glens = [len(ext[r]) for r in group]
             toks = np.zeros((len(group), max(glens)), np.int32)
             for j, r in enumerate(group):
-                toks[j, : len(reqs[r].prompt)] = reqs[r].prompt
+                toks[j, : len(ext[r])] = ext[r]
             seq_lens = jnp.asarray(glens, jnp.int32)
             logits, pcache = M.prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, self.cfg, self.max_len,
                 seq_lens=seq_lens if len(set(glens)) > 1 else None)
             pcache["pos"] = seq_lens
-            self.events.append(ScheduleEvent(
+            self._push_event(ScheduleEvent(
                 plan_step(self.mode, False, True, sum(glens)), 0, sum(glens)))
-            first = self._first_tokens(logits, group)
+            first = self._first_tokens(
+                logits, group, offsets=[len(results[r].tokens) for r in group])
             for j, r in enumerate(group):
-                si = pool.alloc(reqs[r], r)
-                pool.insert(si, pcache, src_slot=j, prompt=reqs[r].prompt)
+                si = pool.alloc(reqs[r], r, ctx=len(ext[r]),
+                                emitted=len(results[r].tokens))
+                pool.insert(si, pcache, src_slot=j, prompt=ext[r])
+                results[r].state = RequestState.RUNNING
                 cur_tok[si] = first[j]
                 emit(si, first[j])
         return True
 
     # ------------------------------------------------------------- reporting
 
+    def health(self) -> dict:
+        """Engine health snapshot: degradation-ladder rungs + per-op fault
+        counters, lifecycle counters (cumulative for the engine's lifetime),
+        pool occupancy, and the fault plan's consumption state (chaos runs).
+        """
+        self._require(self.pool is not None, "health() without a pool")
+        return {
+            "degraded": self.ladder.is_degraded(),
+            "ladder": self.ladder.health(),
+            "counters": dict(self._health),
+            "occupancy": self.pool.occupancy().to_json(),
+            "fault_plan": (self.fault_plan.to_json()
+                           if self.fault_plan is not None else None),
+        }
+
     def schedule_report(self) -> ScheduleReport:
-        assert self.pool is not None
+        self._require(self.pool is not None, "schedule_report() without a pool")
         fused = sum(1 for e in self.events if e.plan.fused)
         decode_events = [e for e in self.events if e.plan.decode]
         return ScheduleReport({
@@ -462,6 +812,10 @@ class Engine:
             "prefill_tokens": sum(e.prefill_tokens for e in self.events),
             "reused_prefix_tokens": sum(e.reused_tokens for e in self.events),
             "prefix": self.pool.prefix_report(),
+            "retried_step_attempts": sum(e.attempts - 1 for e in self.events),
+            "degraded_steps": sum(1 for e in self.events if e.degraded),
+            "slow_penalty_steps": sum(e.slow_penalty for e in self.events),
+            "health": self.health(),
         })
 
 

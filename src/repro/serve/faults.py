@@ -1,0 +1,104 @@
+"""Deterministic, seeded fault injection for the serving engine.
+
+Chaos testing a scheduler is only useful if a failing run can be replayed:
+every :class:`FaultPlan` is a pure function of ``(seed, horizon, rates)`` —
+no wall clock, no global RNG — so a plan that exposes a leak reproduces it
+bit-identically forever. The engine consults the plan at the exact points a
+real deployment fails:
+
+* ``alloc_fail``   — ``CachePool.alloc`` raises :class:`PoolExhausted`
+  (``injected=True``) even though a lane is free: models fragmentation /
+  sharded-pool contention. The engine answers with its normal backpressure
+  path (preempt-or-park), so the test exercises real recovery code.
+* ``kernel_exc``   — the dispatched step raises :class:`KernelFault`
+  attributed to one ladder op: models a Pallas lowering/compile regression.
+  Only fired while that op still runs a kernel backend (no kernel → no
+  kernel fault), so every injected fault is recoverable by design.
+* ``nan_logits``   — the step's logits are overwritten with NaN before
+  sampling: models a numerics trip. Caught by the engine's finite-logits
+  guard, answered by the degradation ladder.
+* ``slow_step``    — the step completes but costs ``penalty`` extra engine
+  steps of clock: models an HBM refresh storm / preempted host. Drives the
+  deadline machinery without faking token content.
+
+Faults are *one-shot*: each armed fault fires at the first opportunity at or
+after its step index, then is spent. ``FaultPlan.seeded`` draws fault kinds,
+step indices, ops and penalties from ``numpy.random.default_rng(seed)`` so
+the chaos suite can sweep seeds; tests may also build plans by hand for
+surgical scenarios.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+KINDS = ("alloc_fail", "kernel_exc", "nan_logits", "slow_step")
+_OPS = ("decode_attention", "pim_gemv")
+
+
+@dataclass
+class Fault:
+    """One armed fault: fires once at the first check at/after ``step``."""
+
+    kind: str            # one of KINDS
+    step: int            # engine-step clock index (from serve() start)
+    op: str = "decode_attention"  # kernel_exc: which ladder op faults
+    penalty: int = 0     # slow_step: extra engine steps of clock
+    fired: bool = False
+
+    def to_json(self) -> dict:
+        return {"kind": self.kind, "step": self.step, "op": self.op,
+                "penalty": self.penalty, "fired": self.fired}
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic schedule of faults, consumed by one ``serve()`` call."""
+
+    faults: list[Fault] = field(default_factory=list)
+    seed: int = 0
+
+    @classmethod
+    def seeded(cls, seed: int, horizon: int = 32, n_faults: int = 4,
+               kinds: tuple[str, ...] = KINDS) -> "FaultPlan":
+        """Draw ``n_faults`` faults over ``[1, horizon)`` steps from ``seed``."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            faults.append(Fault(
+                kind=kind,
+                step=int(rng.integers(1, max(horizon, 2))),
+                op=_OPS[int(rng.integers(len(_OPS)))],
+                penalty=int(rng.integers(1, 4)) if kind == "slow_step" else 0,
+            ))
+        faults.sort(key=lambda f: f.step)
+        return cls(faults=faults, seed=seed)
+
+    # ------------------------------------------------------------- consumption
+
+    def take(self, clock: int, kind: str, *,
+             pred=None) -> "Fault | None":
+        """Pop (mark fired) the first unfired ``kind`` fault due at or before
+        ``clock``; ``pred`` filters candidates (e.g. op still kernel-live).
+        Returns the fault, or None when nothing is due."""
+        for f in self.faults:
+            if f.fired or f.kind != kind or f.step > clock:
+                continue
+            if pred is not None and not pred(f):
+                continue
+            f.fired = True
+            return f
+        return None
+
+    def pending(self) -> int:
+        return sum(1 for f in self.faults if not f.fired)
+
+    def fired(self) -> int:
+        return sum(1 for f in self.faults if f.fired)
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed, "fired": self.fired(),
+                "pending": self.pending(),
+                "faults": [f.to_json() for f in self.faults]}

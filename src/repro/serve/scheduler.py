@@ -14,6 +14,14 @@ come back per request id — no batch-max padding, no truncation of
 over-decoded tokens. ``drain()`` keeps its historic ``{rid: tokens}`` shape;
 the full ``GenerationResult``s (finish reasons, prompt lengths) of the last
 drain are kept on ``Scheduler.results``.
+
+Backpressure is at the FRONT DOOR: with ``max_queue`` set, a submit against
+a full queue raises :class:`AdmissionRejected` (reject-on-full — the queue
+never silently buffers unbounded work; the caller decides to retry, shed, or
+route elsewhere). :meth:`cancel` works in both phases of a request's life:
+still-queued requests are removed and recorded CANCELLED immediately;
+requests inside a running drain are forwarded to ``Engine.cancel`` and honor
+the next step boundary.
 """
 from __future__ import annotations
 
@@ -22,33 +30,63 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro.core.pim_modes import Mode
-from repro.serve.api import GenerationRequest, GenerationResult, SamplingParams
+from repro.serve.api import (FINISH_CANCELLED, GenerationRequest,
+                             GenerationResult, RequestState, SamplingParams)
 from repro.serve.engine import Engine
+from repro.serve.errors import AdmissionRejected
 
 
 @dataclass
 class Scheduler:
     engine: Engine
     mode_policy: str = "auto"  # "auto" | "hbcem" | "lbim" | "blocked"
+    max_queue: int = 0         # >0: bounded admission, reject-on-full
     queue: list = field(default_factory=list)   # [(rid, GenerationRequest)]
     results: dict = field(default_factory=dict)  # {rid: GenerationResult}
     _next_id: int = 0
+    _draining: dict = field(default_factory=dict)  # rid -> in-flight index
 
     def submit(self, prompt: list[int], max_new: int = 16, *,
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
-               on_token: Optional[Callable[[int], None]] = None) -> int:
+               on_token: Optional[Callable[[int], None]] = None,
+               priority: int = 0,
+               ttft_deadline: Optional[int] = None,
+               deadline: Optional[int] = None) -> int:
         """Queue one request; returns its request id."""
         return self.submit_request(GenerationRequest(
             prompt=prompt, max_new_tokens=max_new, eos_id=eos_id,
             sampling=sampling if sampling is not None else SamplingParams(),
-            on_token=on_token))
+            on_token=on_token, priority=priority,
+            ttft_deadline=ttft_deadline, deadline=deadline))
 
     def submit_request(self, request: GenerationRequest) -> int:
+        if self.max_queue > 0 and len(self.queue) >= self.max_queue:
+            raise AdmissionRejected(len(self.queue), self.max_queue)
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, request))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` wherever it lives; False if unknown/done.
+
+        Queued: removed immediately, a CANCELLED result is recorded. Inside
+        a running drain (call from an ``on_token`` callback): forwarded to
+        ``Engine.cancel``, honored at the next step boundary with emitted
+        tokens kept.
+        """
+        for i, (q, r) in enumerate(self.queue):
+            if q == rid:
+                self.queue.pop(i)
+                self.results[rid] = GenerationResult(
+                    prompt_len=len(r.prompt), finish_reason=FINISH_CANCELLED,
+                    state=RequestState.CANCELLED)
+                return True
+        if rid in self._draining:
+            self.engine.cancel(self._draining[rid])
+            return True
+        return False
 
     def _pick_mode(self) -> Mode:
         if self.mode_policy != "auto":
@@ -81,6 +119,10 @@ class Scheduler:
         self.queue.clear()
         reqs = [dataclasses.replace(r, eos_id=eos_id) if eos_id is not None
                 else r for _, r in batch]
-        outs: list[GenerationResult] = self.engine.serve(reqs)
+        self._draining = {rid: i for i, (rid, _) in enumerate(batch)}
+        try:
+            outs: list[GenerationResult] = self.engine.serve(reqs)
+        finally:
+            self._draining = {}
         self.results = {rid: res for (rid, _), res in zip(batch, outs)}
         return {rid: res.tokens for rid, res in self.results.items()}

@@ -11,9 +11,7 @@ Acceptance criteria of the cache-API redesign PR:
   prefill tokens, and the timing model prices the skipped prefill;
 * the block-paged decode-attention path (scalar-prefetch block table) is
   bit-compatible with the contiguous kernel on both reference and interpret
-  backends;
-* the old ``model.insert_slot``/``reset_slot`` helpers survive only as
-  deprecation shims over the cache module.
+  backends.
 """
 import jax
 import jax.numpy as jnp
@@ -337,23 +335,3 @@ def test_pagify_gather_roundtrip_is_bit_exact():
     assert (v == v_lane[:, :, :n, :]).all()
 
 
-# ===========================================================================
-# deprecation shims
-# ===========================================================================
-
-
-def test_model_lane_surgery_shims_warn_and_delegate():
-    cfg = FAMILY_CONFIGS["dense"]()
-    cache = cache_lib.normalize_pos(M.init_decode_cache(cfg, 2, MAX_LEN), 2)
-    src = cache_lib.normalize_pos(M.init_decode_cache(cfg, 1, MAX_LEN), 1)
-    src["pos"] = jnp.asarray([3], jnp.int32)
-    with pytest.deprecated_call():
-        out = M.insert_slot(cache, src, 1)
-    assert int(out["pos"][1]) == 3
-    with pytest.deprecated_call():
-        out = M.reset_slot(out, 1)
-    assert int(out["pos"][1]) == 0
-    with pytest.deprecated_call():
-        assert M.dst_batch(cache) == 2
-    with pytest.deprecated_call():
-        M.normalize_pos(cache, 2)

@@ -18,13 +18,19 @@ from repro.configs import get_config
 from repro.core.pim_modes import Mode
 from repro.models import model as M
 from repro.pimsim import CDPIM, JETSON, LLAMA_1B, replay_events
+from repro.serve import cache as cache_lib
+from repro.serve.api import GenerationRequest
 from repro.serve.engine import (Engine, wave_baseline_events,
                                 wave_baseline_report)
 from serving_refs import BUDGETS, MAX_LEN, PROMPTS, ref_generate
 
-# this module deliberately exercises the DEPRECATED generate(prompts) shim
-# end to end (the acceptance criterion of the request-level API migration)
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+def serve_tokens(eng, prompts, budgets, eos_id=None):
+    """Greedy batch helper over the request-level serving API."""
+    budgets = [budgets] * len(prompts) if isinstance(budgets, int) else budgets
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b, eos_id=eos_id)
+            for p, b in zip(prompts, budgets)]
+    return [r.tokens for r in eng.serve(reqs)]
 
 
 @pytest.fixture(scope="module")
@@ -44,7 +50,7 @@ def reference(setup):
 def test_cross_mode_identity_ragged_budgets(setup, reference, mode):
     cfg, params = setup
     eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
-    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    out = serve_tokens(eng, PROMPTS, BUDGETS)
     assert out == reference
 
 
@@ -53,7 +59,7 @@ def test_per_request_max_new_stops_slot(setup):
     (plus the prefill-seeded first token per request)."""
     cfg, params = setup
     eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.HBCEM, chunk=4)
-    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    out = serve_tokens(eng, PROMPTS, BUDGETS)
     assert [len(o) for o in out] == BUDGETS
     rep = eng.schedule_report()
     decoded_tokens = sum(b - 1 for b in BUDGETS)  # first token is prefill's
@@ -70,7 +76,7 @@ def test_schedule_beats_wave_baseline(setup):
                              LLAMA_1B, JETSON, CDPIM)
     for mode in (Mode.HBCEM, Mode.LBIM):
         eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
-        eng.generate(PROMPTS, max_new=BUDGETS)
+        serve_tokens(eng, PROMPTS, BUDGETS)
         rep = eng.schedule_report()
         assert rep["decode_steps"] < wave["decode_steps"]
         assert rep["idle_slot_steps"] < wave["idle_slot_steps"]
@@ -90,7 +96,7 @@ def test_lbim_fuses_midflight_admission(setup):
     pool never fully drains."""
     cfg, params = setup
     eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
-    eng.generate(PROMPTS, max_new=BUDGETS)
+    serve_tokens(eng, PROMPTS, BUDGETS)
     rep = eng.schedule_report()
     assert rep["fused_steps"] > 0
     assert "MACT_LDB" in rep["modes"]
@@ -100,7 +106,7 @@ def test_eos_retires_slot_and_matches_reference(setup, reference):
     cfg, params = setup
     eos = reference[1][3]  # a token the reference emits mid-stream
     eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
-    out = eng.generate(PROMPTS, max_new=BUDGETS, eos_id=eos)
+    out = serve_tokens(eng, PROMPTS, BUDGETS, eos_id=eos)
     for i, (p, b) in enumerate(zip(PROMPTS, BUDGETS)):
         assert out[i] == ref_generate(cfg, params, p, b, eos=eos)
         assert eos not in out[i][:-1]  # retired at FIRST eos
@@ -111,7 +117,7 @@ def test_eos_from_config(setup, reference):
     eos = reference[1][3]
     eng = Engine(cfg.replace(eos_id=eos), params, max_len=MAX_LEN, slots=2,
                  mode=Mode.HBCEM, chunk=4)
-    out = eng.generate(PROMPTS, max_new=BUDGETS)
+    out = serve_tokens(eng, PROMPTS, BUDGETS)
     assert out[1] == ref_generate(cfg, params, PROMPTS[1], BUDGETS[1], eos=eos)
 
 
@@ -120,7 +126,7 @@ def test_replay_prices_lbim_no_worse_than_blocked(setup):
     totals = {}
     for mode in (Mode.BLOCKED, Mode.LBIM):
         eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=mode, chunk=4)
-        eng.generate(PROMPTS, max_new=BUDGETS)
+        serve_tokens(eng, PROMPTS, BUDGETS)
         totals[mode] = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
     assert totals[Mode.LBIM].total_s <= totals[Mode.BLOCKED].total_s + 1e-9
     assert totals[Mode.LBIM].overlap_saved_s >= 0.0
@@ -140,25 +146,25 @@ def test_ring_cache_continuous_matches_single(mode):
     prompts = [[1, 2, 3, 4, 5, 6, 7], [2, 3], [9, 8, 7, 6, 5, 4, 3, 2, 1]]
     budgets = [3, 4, 2]
     eng = Engine(cfg, params, max_len=32, slots=2, mode=mode, chunk=2)
-    out = eng.generate(prompts, max_new=budgets)
+    out = serve_tokens(eng, prompts, budgets)
     for i, (p, b) in enumerate(zip(prompts, budgets)):
-        single = Engine(cfg, params, max_len=32, slots=1,
-                        mode=Mode.HBCEM).generate([p], max_new=b)[0]
+        single = serve_tokens(Engine(cfg, params, max_len=32, slots=1,
+                                     mode=Mode.HBCEM), [p], [b])[0]
         assert single == out[i], (mode, i)
 
 
 def test_slot_helpers_roundtrip(setup):
-    """insert_slot/reset_slot: lane surgery is exact and lane-local."""
+    """insert_lane/reset_lane: lane surgery is exact and lane-local."""
     cfg, params = setup
-    pool = M.normalize_pos(M.init_decode_cache(cfg, 3, MAX_LEN), 3)
+    pool = cache_lib.normalize_pos(M.init_decode_cache(cfg, 3, MAX_LEN), 3)
     toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
     _, one = M.prefill(params, {"tokens": toks}, cfg, MAX_LEN)
     one["pos"] = jnp.asarray([4], jnp.int32)
-    pool2 = M.insert_slot(pool, one, slot=1)
+    pool2 = cache_lib.insert_lane(pool, one, 1)
     assert int(pool2["pos"][1]) == 4 and int(pool2["pos"][0]) == 0
     assert jnp.allclose(pool2["k"][:, 1], one["k"][:, 0])
     assert jnp.allclose(pool2["k"][:, 0], pool["k"][:, 0])  # other lanes untouched
-    pool3 = M.reset_slot(pool2, 1)
+    pool3 = cache_lib.reset_lane(pool2, 1)
     assert int(pool3["pos"][1]) == 0
     # KV intentionally left behind pos==0 (masked dead weight)
     assert jnp.allclose(pool3["k"][:, 1], pool2["k"][:, 1])

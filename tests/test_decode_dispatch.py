@@ -21,10 +21,10 @@ from repro.core.pim_modes import Mode
 from repro.kernels.decode_attention.ops import decode_attention_op
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.models import model as M
+from repro.serve.api import GenerationRequest
 from repro.serve.engine import Engine
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
 
 
 # --------------------------------------------------------------------------
@@ -114,6 +114,13 @@ def test_per_sequence_dead_tiles_ignored():
 PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8]] * 3 + [[3, 1, 4, 1, 5, 9, 2, 6]] * 3
 
 
+def _serve_tokens(eng, prompts, budgets, eos_id=None):
+    budgets = [budgets] * len(prompts) if isinstance(budgets, int) else budgets
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b, eos_id=eos_id)
+            for p, b in zip(prompts, budgets)]
+    return [r.tokens for r in eng.serve(reqs)]
+
+
 @pytest.fixture(scope="module")
 def llama_setup():
     cfg = get_config("llama3-8b", smoke=True)
@@ -135,7 +142,7 @@ def llama_setup_f32():
 def _tokens(cfg, params, mode, backend):
     eng = Engine(cfg.replace(attn_backend=backend), params,
                  max_len=64, slots=3, mode=mode, chunk=4)
-    return eng.generate(PROMPTS, max_new=6)
+    return _serve_tokens(eng, PROMPTS, 6)
 
 
 @pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
@@ -165,11 +172,11 @@ def test_engine_ragged_wave_dispatched(llama_setup):
     cfg, params = llama_setup
     cfg_k = cfg.replace(attn_backend="interpret")
     prompts = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9]]
-    batched = Engine(cfg_k, params, max_len=64, slots=4,
-                     mode=Mode.HBCEM).generate(prompts, max_new=4)
+    batched = _serve_tokens(Engine(cfg_k, params, max_len=64, slots=4,
+                                   mode=Mode.HBCEM), prompts, 4)
     for i, p in enumerate(prompts):
-        single = Engine(cfg_k, params, max_len=64, slots=1,
-                        mode=Mode.HBCEM).generate([p], max_new=4)[0]
+        single = _serve_tokens(Engine(cfg_k, params, max_len=64, slots=1,
+                                      mode=Mode.HBCEM), [p], 4)[0]
         assert single == batched[i]
 
 

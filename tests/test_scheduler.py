@@ -5,10 +5,10 @@ import pytest
 from repro.configs import get_config
 from repro.core.pim_modes import Mode, plan_step
 from repro.models import model as M
+from repro.serve.api import GenerationRequest
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Scheduler
 
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
 
 
 @pytest.fixture(scope="module")
@@ -83,7 +83,8 @@ def test_schedule_report_fused_step_counting(setup):
     fused count equals the MACT_LDB events in the stream."""
     cfg, params = setup
     eng = Engine(cfg, params, max_len=64, slots=2, mode=Mode.LBIM, chunk=4)
-    eng.generate([[1, 2, 3, 4]] * 4, max_new=6)
+    eng.serve([GenerationRequest(prompt=[1, 2, 3, 4], max_new_tokens=6)
+               for _ in range(4)])
     rep = eng.schedule_report()
     fused_events = [e for e in eng.events if e.plan.fused]
     assert rep["fused_steps"] == len(fused_events) > 0

@@ -5,9 +5,9 @@ import pytest
 from repro.configs import get_config
 from repro.core.pim_modes import Mode, plan_step
 from repro.models import model as M
+from repro.serve.api import GenerationRequest
 from repro.serve.engine import Engine
 
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")  # covers the deprecated generate() shim
 
 PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8]] * 3 + [[3, 1, 4, 1, 5, 9, 2, 6]] * 3
 
@@ -19,9 +19,16 @@ def llama_setup():
     return cfg, params
 
 
+def _serve_tokens(eng, prompts, budgets, eos_id=None):
+    budgets = [budgets] * len(prompts) if isinstance(budgets, int) else budgets
+    reqs = [GenerationRequest(prompt=p, max_new_tokens=b, eos_id=eos_id)
+            for p, b in zip(prompts, budgets)]
+    return [r.tokens for r in eng.serve(reqs)]
+
+
 def _gen(cfg, params, mode, **kw):
     eng = Engine(cfg, params, max_len=64, slots=3, mode=mode, chunk=4, **kw)
-    out = eng.generate(PROMPTS, max_new=6)
+    out = _serve_tokens(eng, PROMPTS, 6)
     return out, eng
 
 
@@ -49,10 +56,10 @@ def test_ragged_wave_matches_single_sequence(llama_setup):
     cfg, params = llama_setup
     prompts = [[1, 2, 3], [1, 2, 3, 4, 5, 6, 7], [5, 5], [9]]
     eng = Engine(cfg, params, max_len=64, slots=4, mode=Mode.HBCEM)
-    batched = eng.generate(prompts, max_new=4)
+    batched = _serve_tokens(eng, prompts, 4)
     for i, p in enumerate(prompts):
-        single = Engine(cfg, params, max_len=64, slots=1,
-                        mode=Mode.HBCEM).generate([p], max_new=4)[0]
+        single = _serve_tokens(Engine(cfg, params, max_len=64, slots=1,
+                                      mode=Mode.HBCEM), [p], 4)[0]
         assert single == batched[i]
 
 
@@ -71,10 +78,10 @@ def test_state_family_serves_ragged_prompts():
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     prompts = [[1, 2, 3], [1, 2], [4, 4, 4, 4]]
     eng = Engine(cfg, params, max_len=32, slots=2, mode=Mode.LBIM, chunk=2)
-    batched = eng.generate(prompts, max_new=2)
+    batched = _serve_tokens(eng, prompts, 2)
     for i, p in enumerate(prompts):
-        single = Engine(cfg, params, max_len=32, slots=1,
-                        mode=Mode.HBCEM).generate([p], max_new=2)[0]
+        single = _serve_tokens(Engine(cfg, params, max_len=32, slots=1,
+                                      mode=Mode.HBCEM), [p], 2)[0]
         assert single == batched[i]
 
 
@@ -83,8 +90,6 @@ def test_engine_rejects_overflow_and_empty():
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, max_len=8, slots=1)
     with pytest.raises(ValueError):
-        eng.generate([[1, 2, 3, 4]], max_new=6)  # 4 + 6 - 1 > 8
+        _serve_tokens(eng, [[1, 2, 3, 4]], 6)  # 4 + 6 - 1 > 8
     with pytest.raises(ValueError):
-        eng.generate([[]], max_new=2)
-    with pytest.raises(ValueError):
-        eng.generate([[1], [2]], max_new=[3])  # budget list mismatch
+        _serve_tokens(eng, [[]], 2)
