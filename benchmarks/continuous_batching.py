@@ -168,6 +168,8 @@ def run_faults(emit, seed: int = 0):
     for mode in (Mode.BLOCKED, Mode.HBCEM, Mode.LBIM):
         plan = FaultPlan.seeded(seed, horizon=16, n_faults=4)
         eng = sm.engine(mode=mode, chunk=4)
+        assert eng.pool.paged, \
+            "chaos must cover the fully paged residency path"
         eng.fault_plan = plan
         reqs = [GenerationRequest(prompt=p, max_new_tokens=b)
                 for p, b in zip(prompts, budgets)]
@@ -186,12 +188,14 @@ def run_faults(emit, seed: int = 0):
         rep = eng.schedule_report()
         sim = replay_events(eng.events, LLAMA_1B, JETSON, CDPIM)
         emit(f"continuous/faults_{mode.value}", wall * 1e6,
-             f"seed={seed} fired={plan.fired()}/{len(plan.faults)} "
+             f"seed={seed} paged={eng.pool.paged} "
+             f"fired={plan.fired()}/{len(plan.faults)} "
              f"retried={rep['retried_step_attempts']} "
              f"degraded_steps={rep['degraded_steps']} "
              f"stall_ms={sim.stall_s*1e3:.2f} "
              f"states={[r.state.value for r in res]}")
-    emit("continuous/faults_ok", 0.0, f"seed={seed}: zero leaked pages")
+    emit("continuous/faults_ok", 0.0,
+         f"seed={seed}: zero leaked pages (paged residency)")
 
 
 if __name__ == "__main__":

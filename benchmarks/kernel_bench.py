@@ -8,6 +8,8 @@ time from the kernel's traffic model — the number the roofline consumes.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -15,12 +17,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import projected_decode_attn_bytes
-from repro.core.kv_mapping import init_cache, read_output, read_scores
-from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.core.kv_mapping import init_cache, init_paged_cache, read_output, read_scores
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_paged_op)
 from repro.kernels.pim_gemv.ref import pim_gemv_ref, quantize_ref
+from repro.pimsim import CDPIM, JETSON, LLAMA_1B
+from repro.pimsim.latency import pim_decode_step_time
 
 HBM_BW = 819e9
 PEAK_INT8 = 394e12  # v5e int8 ops/s
+
+# committed cross-PR trajectory of the paged split-KV decode path (anchored
+# to the repo root like BENCH_serving.json)
+BENCH_PAGED = pathlib.Path(__file__).resolve().parent.parent / "BENCH_paged.json"
 
 
 def _time(fn, *args, n=5):
@@ -95,6 +104,62 @@ def run(emit, dry_run: bool = False):
              f"pos={pos} projected_bytes={bytes_step} dense_bytes={dense_bytes} "
              f"tpu_projected_us={bytes_step/HBM_BW*1e6:.1f} "
              f"traffic_vs_dense={bytes_step/dense_bytes:.3f}")
+
+    # --- paged split-KV flash decoding: splits x fill sweep -----------------
+    # Wall time covers the split reference path (stage-1 partials + stage-2
+    # merge) at CPU-feasible shapes; the `derived` column prices the same
+    # split count with the calibrated PIM timing model at long context
+    # (LLAMA_1B on JETSON/CDPIM), where fanning the KV sweep across Pbank
+    # groups should beat the single pass despite the per-split merge.
+    p_bsz, p_hkv, p_g, p_hd, page, nb = ((2, 2, 2, 32, 64, 8) if dry_run
+                                         else (4, 8, 4, 128, 256, 8))
+    p_lmax = page * nb
+    model_ctx_full = 4096  # modeled context at fill=1
+    qp = jnp.asarray(rng.standard_normal((p_bsz, p_hkv * p_g, p_hd)), jnp.bfloat16)
+    pages = init_paged_cache(1, p_bsz * nb + 1, p_hkv, p_hd, page, jnp.bfloat16)
+    kp = jnp.asarray(rng.standard_normal(pages["k_pages"].shape[1:]), jnp.bfloat16)
+    vp = jnp.asarray(rng.standard_normal(pages["v_pages"].shape[1:]), jnp.bfloat16)
+    table = jnp.asarray(rng.permutation(p_bsz * nb).reshape(p_bsz, nb) + 1,
+                        jnp.int32)
+    sweep = []
+    for frac_name, frac in (("1/8", 8), ("1/2", 2), ("1", 1)):
+        pos = p_lmax // frac
+        posv = jnp.full((p_bsz,), pos, jnp.int32)
+        ctx = model_ctx_full // frac
+        for splits in (1, 2, 4, 8):
+
+            def attn_split(qq, kk, vv, tt, posv=posv, splits=splits):
+                return decode_attention_paged_op(
+                    qq, kk, vv, tt, posv, scale=p_hd ** -0.5,
+                    num_splits=splits, use_kernel=False)
+
+            t = _time(jax.jit(attn_split), qp, kp, vp, table)
+            modeled = pim_decode_step_time(LLAMA_1B, ctx, JETSON, CDPIM,
+                                           batch=p_bsz, kv_splits=splits)
+            emit(f"kernel/paged_split{splits}_fill_{frac_name}", t * 1e6,
+                 f"pos={pos} modeled_ctx={ctx} modeled_us={modeled*1e6:.1f}")
+            sweep.append({"fill": frac_name, "pos": pos, "splits": splits,
+                          "wall_us": round(t * 1e6, 2), "modeled_ctx": ctx,
+                          "modeled_us": round(modeled * 1e6, 3)})
+    if dry_run:
+        emit("kernel/paged_bench_json", 0.0,
+             "dry-run: BENCH_paged.json not written")
+    else:
+        best_full = min(s["modeled_us"] for s in sweep
+                        if s["fill"] == "1" and s["splits"] > 1)
+        single_full = next(s["modeled_us"] for s in sweep
+                           if s["fill"] == "1" and s["splits"] == 1)
+        BENCH_PAGED.write_text(json.dumps({
+            "shape": {"batch": p_bsz, "kv_heads": p_hkv, "q_per_kv": p_g,
+                      "head_dim": p_hd, "page": page, "blocks": nb},
+            "model": {"llm": "llama-1b", "device": "jetson", "design": "cdpim",
+                      "ctx_at_fill_1": model_ctx_full},
+            "split_wins_at_full_fill": best_full < single_full,
+            "sweep": sweep,
+        }, indent=2) + "\n")
+        emit("kernel/paged_bench_json", 0.0,
+             f"split_wins_at_full_fill={best_full < single_full} "
+             f"best_split_us={best_full:.1f} single_us={single_full:.1f}")
 
     # --- W8A8 quantization error audit (paper: no noticeable degradation) --
     d_q = 256 if dry_run else 1024

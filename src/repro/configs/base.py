@@ -72,6 +72,11 @@ class ModelConfig:
                                       # PIM-GEMV kernel can fall back without
                                       # also demoting decode attention
     decode_block_l: int = 512         # L-tile of the decode-attention kernel
+    decode_kv_splits: int = 1         # paged decode: KV-split axis width of the
+                                      # two-stage flash reduction (1 = single
+                                      # pass; >1 parallelizes long-context L —
+                                      # the replay analogue of HBCEM's
+                                      # pseudo-bank split)
     quantized_decode: bool = False    # W8A8 PIM-GEMV for decode-time qkv/o/MLP
                                       # projections (paper's INT8 CU path)
     quant_decode_max_batch: int = 8   # largest GEMV batch routed to W8A8

@@ -211,7 +211,9 @@ def decode_attention_paged(
     """Dispatched BLOCK-PAGED decode attention: the block table indirects
     each sequence's logical blocks to shared physical pages (prefix reuse /
     CachePool storage) — scalar-prefetch index maps on the kernel backends,
-    gather-materialize on the reference path. Returns (B, Hq, hd) float32."""
+    gather-materialize on the reference path. ``cfg.decode_kv_splits > 1``
+    selects the two-stage split-KV reduction (long-context L parallelism).
+    Returns (B, Hq, hd) float32."""
     backend = resolve_backend(cfg)
     return decode_attention_paged_op(
         q, k_pages, v_pages, block_table, end,
@@ -220,6 +222,7 @@ def decode_attention_paged(
         softcap=softcap,
         interpret=(backend == "interpret"),
         use_kernel=(backend in _KERNEL_BACKENDS),
+        num_splits=getattr(cfg, "decode_kv_splits", 1),
     )
 
 

@@ -165,6 +165,64 @@ def extract_block(k_lane: jax.Array, v_lane: jax.Array, block_idx: int,
             jax.lax.dynamic_slice_in_dim(v_lane, lo, block, axis=-2))
 
 
+def append_layer_paged(
+    k_pages: jax.Array,   # (P, H, hd, Bsz)  one layer's K pages, col-wise
+    v_pages: jax.Array,   # (P, H, Bsz, hd)  one layer's V pages, row-wise
+    k_new: jax.Array,     # (B, H, T, hd)
+    v_new: jax.Array,     # (B, H, T, hd)
+    pos: jax.Array,       # (B,) int32 fill levels
+    table: jax.Array,     # (B, NB) int32 physical page ids (>= 0)
+    block: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Write T new tokens' K/V **into their pages in place** — the paged
+    analogue of :func:`append_layer`, so lanes never materialize contiguously.
+
+    Token ``pos + t`` of lane ``b`` lands at offset ``(pos+t) % block`` of
+    physical page ``table[b, (pos+t) // block]``: a K column write / V row
+    write inside the page, preserving the per-block dual layout bit-exactly.
+    The pool guarantees residency (every touched table entry is a writable
+    page — copy-on-write already resolved host-side) before the step runs;
+    free lanes all alias one pinned dummy page whose garbage is never read
+    by an active lane.
+    """
+    b, h, t, hd = k_new.shape
+    k_new = k_new.astype(k_pages.dtype)
+    v_new = v_new.astype(v_pages.dtype)
+    if t == 1:
+        page = table[jnp.arange(b), pos // block]          # (B,)
+        off = pos % block                                  # (B,)
+        k_pages = k_pages.at[page, :, :, off].set(k_new[:, :, 0, :])
+        v_pages = v_pages.at[page, :, off, :].set(v_new[:, :, 0, :])
+        return k_pages, v_pages
+    t_idx = pos[:, None] + jnp.arange(t)                   # (B, T)
+    page = jnp.take_along_axis(table, t_idx // block, axis=1)
+    off = t_idx % block
+    k_bt = jnp.swapaxes(k_new, 1, 2)                       # (B, T, H, hd)
+    v_bt = jnp.swapaxes(v_new, 1, 2)
+    # separated advanced indices (page at axis 0, off at the token axis) put
+    # the (B, T) index dims in front: scatter values are (B, T, H, hd)
+    k_pages = k_pages.at[page, :, :, off].set(k_bt)
+    v_pages = v_pages.at[page, :, off, :].set(v_bt)
+    return k_pages, v_pages
+
+
+def materialize_lanes(k_pages: jax.Array, v_pages: jax.Array,
+                      table: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gather every lane's pages into contiguous dual-layout caches.
+
+    ``table`` (B, NB) — per-lane block tables. Returns K (B, H, hd, NB*Bsz) /
+    V (B, H, NB*Bsz, hd): in-XLA gather for the dense (T>1 chunk-prefill /
+    reference) attention path. Garbage beyond each lane's fill level is
+    masked by the caller — positions are what carry validity, not pages.
+    """
+    kg = jnp.take(k_pages, table, axis=0)                  # (B, NB, H, hd, Bsz)
+    vg = jnp.take(v_pages, table, axis=0)                  # (B, NB, H, Bsz, hd)
+    b, nb, h, hd, bsz = kg.shape
+    k = jnp.transpose(kg, (0, 2, 3, 1, 4)).reshape(b, h, hd, nb * bsz)
+    v = jnp.transpose(vg, (0, 2, 1, 3, 4)).reshape(b, h, nb * bsz, hd)
+    return k, v
+
+
 def gather_pages(k_pages: jax.Array, v_pages: jax.Array,
                  table) -> tuple[jax.Array, jax.Array]:
     """Materialize a contiguous prefix from physical pages.

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.decode_attention.ref import merge_splits
+
 NEG_INF = -2.3819763e38
 DEFAULT_BLOCK_L = 512
 
@@ -219,3 +221,168 @@ def decode_attention_paged(
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
         interpret=interpret,
     )(start_b, end_b, jnp.asarray(block_table, jnp.int32), q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Two-stage split-KV flash decoding (long-context L-axis parallelism)
+# ---------------------------------------------------------------------------
+#
+# The single-pass kernels stream one sequential tile pipeline per (b, head) —
+# fine at short context, but at long fill the L axis is the whole budget and
+# it serializes. CD-PIM's HBCEM answer is splitting each bank into four
+# pseudo-banks so the same GEMV runs on segmented bitlines in parallel; the
+# kernel-space analogue (the Bullet/SGLang NUM_KV_SPLITS decode shape) adds a
+# KV-split grid axis: stage 1 runs an independent flash-softmax accumulation
+# per split and emits *unnormalized* per-split partials (acc, m, l); stage 2
+# is a tiny associative merge across splits (ref.merge_splits). A split whose
+# block range lies outside ``[start, end)`` emits the identity partial
+# (m = NEG_INF, l = 0, acc = 0) and — like the single-pass dead tiles — its
+# index map re-addresses a live page, so cache traffic still scales with the
+# fill level, not with ``num_splits × Lmax``.
+
+
+def _split_kernel(start_ref, end_ref, table_ref, q_ref, k_ref, v_ref,
+                  acc_out_ref, m_out_ref, l_out_ref,
+                  m_ref, l_ref, acc_ref, *, block: int, bps: int,
+                  n_blocks: int, scale: float, softcap: float | None):
+    del table_ref  # consumed by the BlockSpec index maps
+    i = pl.program_id(0)
+    si = pl.program_id(2)
+    j = pl.program_id(3)
+    start = start_ref[i]
+    end = end_ref[i]
+    blk = si * bps + j            # global logical block index
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((blk < n_blocks) & (blk * block < end)
+             & ((blk + 1) * block > start))
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (hd, Bsz) column-wise
+        v = v_ref[0, 0].astype(jnp.float32)           # (Bsz, hd) row-wise
+        s = jax.lax.dot_general(
+            q, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        idx = blk * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((idx >= start) & (idx < end), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == bps - 1)
+    def _finalize():
+        # UNNORMALIZED partials: stage 2 owns the division. Dead splits pass
+        # their init state through — the merge identity.
+        acc_out_ref[0, 0, 0] = acc_ref[...]
+        m_out_ref[0, 0, 0] = m_ref[...]
+        l_out_ref[0, 0, 0] = l_ref[...]
+
+
+def _clamp_split(blk, start, end, bsz, s_lo, s_hi):
+    """Clamp a split-local fetch into the split's live block sub-range; a
+    fully dead split re-addresses the last globally-live block instead (one
+    revisited fetch per dead split, never a fresh HBM copy per tile)."""
+    gfirst = start // bsz
+    glast = jnp.maximum((end + bsz - 1) // bsz - 1, gfirst)
+    first = jnp.maximum(gfirst, s_lo)
+    last = jnp.minimum(glast, s_hi - 1)
+    return jnp.where(first <= last, jnp.clip(blk, first, last), glast)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_splits", "scale", "softcap", "interpret"))
+def decode_attention_paged_split(
+    q: jax.Array,            # (B, Hkv, G, hd)
+    k_pages: jax.Array,      # (P, Hkv, hd, Bsz) column-wise pages
+    v_pages: jax.Array,      # (P, Hkv, Bsz, hd) row-wise pages
+    block_table: jax.Array,  # (B, NB) int32
+    pos: jax.Array,          # (B,) int32 — end of the live range (exclusive)
+    start: jax.Array,        # (B,) int32 — start of the live range (inclusive)
+    *,
+    num_splits: int,
+    scale: float,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash decode with a two-stage split-KV reduction.
+
+    Grid ``(B, Hkv, S, blocks_per_split)``: the split axis parallelizes the
+    L walk, the inner axis streams each split's pages sequentially through
+    the same online-softmax body as the single-pass kernel. Stage 1 writes
+    per-split ``(acc, m, l)`` partials to HBM; stage 2 merges them with
+    :func:`ref.merge_splits` (associative — identical result to one pass up
+    to float reassociation; ``num_splits == 1`` callers should use
+    :func:`decode_attention_paged`, which is bit-identical to the contiguous
+    kernel).
+    """
+    b, hkv, g, hd = q.shape
+    bsz = k_pages.shape[-1]
+    nb = block_table.shape[1]
+    bps = -(-nb // max(int(num_splits), 1))   # blocks per split (ceil)
+    n_splits = -(-nb // bps)                  # realized splits (<= requested)
+    grid = (b, hkv, n_splits, bps)
+
+    kernel = functools.partial(
+        _split_kernel, block=bsz, bps=bps, n_blocks=nb,
+        scale=scale, softcap=softcap)
+
+    def _page(blk, si, sr, er, tr, i):
+        s_lo = si * bps
+        s_hi = jnp.minimum((si + 1) * bps, nb)
+        return tr[i, _clamp_split(blk, sr[i], er[i], bsz, s_lo, s_hi)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda i, j, si, jj, sr, er, tr: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd, bsz),
+                         lambda i, j, si, jj, sr, er, tr:
+                         (_page(si * bps + jj, si, sr, er, tr, i), j, 0, 0)),
+            pl.BlockSpec((1, 1, bsz, hd),
+                         lambda i, j, si, jj, sr, er, tr:
+                         (_page(si * bps + jj, si, sr, er, tr, i), j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, hd),
+                         lambda i, j, si, jj, sr, er, tr: (i, j, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda i, j, si, jj, sr, er, tr: (i, j, si, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda i, j, si, jj, sr, er, tr: (i, j, si, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    end_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, n_splits, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, n_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, n_splits, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(start_b, end_b, jnp.asarray(block_table, jnp.int32), q, k_pages, v_pages)
+    return merge_splits(acc, m, l)

@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
-    decode_attention, decode_attention_paged)
-from repro.kernels.decode_attention.ref import (decode_attention_paged_ref,
-                                                decode_attention_ref)
+    decode_attention, decode_attention_paged, decode_attention_paged_split)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_paged_ref, decode_attention_paged_split_ref,
+    decode_attention_ref)
 
 
 def decode_attention_op(
@@ -62,24 +63,41 @@ def decode_attention_paged_op(
     softcap: float | None = None,
     interpret: bool = False,
     use_kernel: bool = True,
+    num_splits: int = 1,
 ) -> jax.Array:
     """Block-paged sibling of :func:`decode_attention_op`: the block table
     maps each sequence's logical Bsz-token blocks to physical pages. Returns
     (B, Hq, hd) float32. The logical length is ``NB * Bsz`` — no padding
-    pass is needed because pages ARE the tile grid."""
+    pass is needed because pages ARE the tile grid.
+
+    ``num_splits > 1`` routes through the two-stage split-KV reduction
+    (associative merge — allclose to, not bit-identical with, one pass);
+    ``num_splits == 1`` is the single-pass path, bit-identical to the
+    contiguous kernel. Splits are clamped to the block count."""
     b, hq, hd = q.shape
     hkv = k_pages.shape[1]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, hd)
     bt = jnp.asarray(block_table, jnp.int32)
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    splits = max(1, min(int(num_splits), bt.shape[1]))
     if not use_kernel:
-        out = decode_attention_paged_ref(qg, k_pages, v_pages, bt, pos_b,
-                                         scale, softcap, start=start)
+        if splits > 1:
+            out = decode_attention_paged_split_ref(
+                qg, k_pages, v_pages, bt, pos_b, splits, scale, softcap,
+                start=start)
+        else:
+            out = decode_attention_paged_ref(qg, k_pages, v_pages, bt, pos_b,
+                                             scale, softcap, start=start)
         return out.reshape(b, hq, hd)
     start_b = (jnp.zeros((b,), jnp.int32) if start is None
                else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
-    out = decode_attention_paged(qg, k_pages, v_pages, bt, pos_b, start_b,
-                                 scale=scale, softcap=softcap,
-                                 interpret=interpret)
+    if splits > 1:
+        out = decode_attention_paged_split(
+            qg, k_pages, v_pages, bt, pos_b, start_b, num_splits=splits,
+            scale=scale, softcap=softcap, interpret=interpret)
+    else:
+        out = decode_attention_paged(qg, k_pages, v_pages, bt, pos_b, start_b,
+                                     scale=scale, softcap=softcap,
+                                     interpret=interpret)
     return out.reshape(b, hq, hd)

@@ -67,3 +67,70 @@ def decode_attention_paged_ref(
     contiguous cache from its block table, then run the contiguous oracle."""
     k, v = materialize_pages(k_pages, v_pages, jnp.asarray(block_table, jnp.int32))
     return decode_attention_ref(q, k, v, pos, scale, softcap, start=start)
+
+
+def merge_splits(acc: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    """Stage-2 reduction of per-split flash-softmax partials.
+
+    ``acc`` (B, Hkv, S, G, hd) unnormalized per-split outputs, ``m`` / ``l``
+    (B, Hkv, S, G) per-split running max / sum-of-exp. A dead split carries
+    ``m = NEG_INF, l = 0, acc = 0`` and contributes exactly nothing; an
+    all-dead lane yields zeros (the empty-range semantics the single-pass
+    kernel defines). Shared by the Pallas two-stage path and the split
+    reference so both merge bit-identically.
+    """
+    m_max = jnp.max(m, axis=2)                                   # (B, Hkv, G)
+    # all-dead lane: m_max == NEG_INF and m - m_max == 0 -> alpha 1, but
+    # l == 0 everywhere so the guarded denominator still returns zeros
+    alpha = jnp.exp(m - m_max[:, :, None])                       # (B, Hkv, S, G)
+    l_tot = jnp.sum(l * alpha, axis=2)                           # (B, Hkv, G)
+    out = jnp.sum(acc * alpha[..., None], axis=2)                # (B, Hkv, G, hd)
+    return out / jnp.where(l_tot > 0.0, l_tot, 1.0)[..., None]
+
+
+def decode_attention_paged_split_ref(
+    q: jnp.ndarray,            # (B, Hkv, G, hd)
+    k_pages: jnp.ndarray,      # (P, Hkv, hd, Bsz)
+    v_pages: jnp.ndarray,      # (P, Hkv, Bsz, hd)
+    block_table: jnp.ndarray,  # (B, NB) int32
+    pos,
+    num_splits: int,
+    scale: float,
+    softcap: float | None = None,
+    start=None,
+) -> jnp.ndarray:
+    """Split-KV reference: per-split unnormalized flash partials over each
+    split's block range, merged by :func:`merge_splits` — the jnp mirror of
+    the two-stage Pallas path (same split boundaries, same merge)."""
+    b = q.shape[0]
+    nb = block_table.shape[1]
+    bsz = k_pages.shape[-1]
+    k, v = materialize_pages(k_pages, v_pages, jnp.asarray(block_table, jnp.int32))
+    lmax = nb * bsz
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    s_all = jnp.einsum("bkgd,bkdl->bkgl", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s_all = softcap * jnp.tanh(s_all / softcap)
+    idx = jnp.arange(lmax)
+    valid = (idx[None, :] >= start_b[:, None]) & (idx[None, :] < pos_b[:, None])
+    s_all = jnp.where(valid[:, None, None, :], s_all, NEG_INF)
+    bps = -(-nb // num_splits)               # blocks per split (ceil)
+    accs, ms, ls = [], [], []
+    for si in range(num_splits):
+        lo, hi = si * bps * bsz, min((si + 1) * bps, nb) * bsz
+        s = s_all[..., lo:hi]
+        live = valid[:, lo:hi].any(axis=-1)                      # (B,)
+        m = jnp.max(s, axis=-1)                                  # (B, Hkv, G)
+        m = jnp.where(live[:, None, None], m, NEG_INF)
+        p = jnp.where(live[:, None, None, None],
+                      jnp.exp(s - m[..., None]), 0.0)
+        p = jnp.where(valid[:, None, None, lo:hi], p, 0.0)
+        ls.append(jnp.sum(p, axis=-1))
+        accs.append(jnp.einsum("bkgl,bkld->bkgd", p,
+                               v.astype(jnp.float32)[:, :, lo:hi, :]))
+        ms.append(m)
+    return merge_splits(jnp.stack(accs, axis=2), jnp.stack(ms, axis=2),
+                        jnp.stack(ls, axis=2))

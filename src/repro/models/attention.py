@@ -119,11 +119,10 @@ def attention_dense(
     scale = _scale(cfg)
 
     cq = min(cfg.q_chunk, t)
-    n_chunks = max(t // cq, 1)
-    cq = t // n_chunks if t % n_chunks == 0 else t  # fall back to single chunk
-
-    if t % cq != 0:
-        n_chunks, cq = 1, t
+    if t % cq == 0:
+        n_chunks = t // cq
+    else:
+        n_chunks, cq = 1, t  # ragged tail: fall back to a single chunk
 
     k_pos_full = jnp.arange(t)
 
@@ -312,3 +311,67 @@ def attention_decode(
     y = y.reshape(b, cfg.n_heads, t, hd).transpose(0, 2, 1, 3).reshape(b, t, -1)
     proj = lin or _dense_matmul
     return proj(p["wo"], y), k_cache, v_cache
+
+
+def attention_decode_paged(
+    p: dict,
+    x: jax.Array,            # (B, T, d) — T new tokens (usually 1)
+    k_pages: jax.Array,      # (P, Hkv, hd, Bsz) column-wise pages (one layer)
+    v_pages: jax.Array,      # (P, Hkv, Bsz, hd) row-wise pages (one layer)
+    block_table: jax.Array,  # (B, NB) int32 — physical page per logical block
+    pos: jax.Array,          # (B,) int32: per-lane cache fill
+    cfg: ModelConfig,
+    *,
+    window=None,
+):
+    """One decode step against BLOCK-PAGED dual-layout KV — the fully paged
+    sibling of :func:`attention_decode`, bit-identical to it per token.
+
+    The new token's K/V is scattered into its page **in place**
+    (:func:`kv_mapping.append_layer_paged`) — lanes never materialize
+    contiguously. Single-token steps stream pages through the dispatched
+    paged kernel (split-KV when ``cfg.decode_kv_splits > 1``); multi-token
+    chunk-prefill steps (and the ``dense`` backend) gather the lanes in-XLA
+    and run the exact dense masked einsum of the contiguous path, so garbage
+    beyond each fill level is masked identically and the bits match.
+    """
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    block = k_pages.shape[-1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,)).astype(jnp.int32)
+    positions = pos_b[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    lin = _decode_linear(cfg) if t == 1 else None
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, linear_fn=lin)
+
+    k_pages, v_pages = kv_mapping.append_layer_paged(
+        k_pages, v_pages, k_new, v_new, pos_b, block_table, block)
+
+    if t == 1 and dispatch.use_dispatch(cfg):
+        end = (pos_b + 1).astype(jnp.int32)
+        start = None if window is None else jnp.maximum(end - window, 0).astype(jnp.int32)
+        o = dispatch.decode_attention_paged(
+            q[:, :, 0, :], k_pages, v_pages, block_table, end, start=start,
+            scale=_scale(cfg), softcap=cfg.attn_softcap, cfg=cfg)
+        y = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
+        return lin(p["wo"], y), k_pages, v_pages
+
+    k_cache, v_cache = kv_mapping.materialize_lanes(k_pages, v_pages, block_table)
+    lmax = k_cache.shape[-1]
+    g = cfg.q_per_kv
+    qg = q.reshape(b, cfg.n_kv_heads, g, t, hd)
+
+    s = kv_mapping.read_scores(qg, k_cache, "cdpim").astype(jnp.float32) * _scale(cfg)
+    s = softcap(s, cfg.attn_softcap)
+
+    k_pos = jnp.arange(lmax)
+    q_pos = positions  # (B, T)
+    valid = k_pos[None, None, :] <= q_pos[:, :, None]       # (B, T, L)
+    if window is not None:
+        valid = valid & (k_pos[None, None, :] > q_pos[:, :, None] - window)
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :, :]
+
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    y = kv_mapping.read_output(pr, v_cache, "cdpim")
+    y = y.reshape(b, cfg.n_heads, t, hd).transpose(0, 2, 1, 3).reshape(b, t, -1)
+    proj = lin or _dense_matmul
+    return proj(p["wo"], y), k_pages, v_pages

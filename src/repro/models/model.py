@@ -278,6 +278,23 @@ def _dense_block_decode(lp, x, kc, vc, pos, cfg: ModelConfig, flag):
     return x + m, kc, vc
 
 
+def _dense_block_decode_paged(lp, x, kp, vp, table, pos, cfg: ModelConfig, flag):
+    """Paged sibling of :func:`_dense_block_decode`: one layer's physical
+    pages + the shared per-lane block table instead of contiguous lanes."""
+    h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+    window = None
+    if cfg.sliding_window is not None:
+        if cfg.local_global_pattern:
+            window = jnp.where(flag > 0, cfg.sliding_window, jnp.int32(2**30))
+        else:
+            window = cfg.sliding_window
+    a, kp, vp = attn_lib.attention_decode_paged(
+        lp["attn"], h, kp, vp, table, pos, cfg, window=window)
+    if cfg.post_block_norm:
+        a = L.rmsnorm(lp["post_attn_norm"], a, cfg.norm_eps)
+    return _mlp_tail(lp, x + a, cfg), kp, vp
+
+
 # ===========================================================================
 # backbone forward (train / prefill)
 # ===========================================================================
@@ -721,6 +738,30 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig):
 
     if windowed_cache_applicable(cfg):
         return _windowed_decode_step(params, cache, x, tokens, cfg)
+
+    if "k_pages" in cache:
+        # fully paged dense/vlm/moe decode: the physical page pool rides the
+        # scan carry; lanes never materialize contiguously. The block table
+        # is shared by all layers (one logical layout, layer-stacked pages).
+        table = cache["block_table"]
+
+        def body(carry, xs):
+            h, kp_all, vp_all = carry
+            lp, flag, idx = xs
+            kp = kp_all[idx]
+            vp = vp_all[idx]
+            h, kp, vp = _dense_block_decode_paged(lp, h, kp, vp, table, pos, cfg, flag)
+            kp_all = jax.lax.dynamic_update_index_in_dim(kp_all, kp, idx, 0)
+            vp_all = jax.lax.dynamic_update_index_in_dim(vp_all, vp, idx, 0)
+            return (h, kp_all, vp_all), None
+
+        (x, kp_new, vp_new), _ = maybe_scan(
+            body, (x, cache["k_pages"], cache["v_pages"]),
+            (params["layers"], flags, jnp.arange(n_layers)), scan=cfg.scan_layers)
+        new_cache = {"k_pages": kp_new, "v_pages": vp_new,
+                     "block_table": table, "pos": pos + tokens.shape[1]}
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return logits_fn(params, x, cfg), new_cache
 
     # dense / vlm / moe — cache carried through scan, updated in place
     def body(carry, xs):

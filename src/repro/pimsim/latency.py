@@ -22,6 +22,9 @@ PIM_BYTES = 1         # int8 weights + activations on PIM
 AUX_REF_WIDTH = 2048.0
 # per-sequence vector work does not amortize across the batch:
 AUX_BATCH_POWER = 1.0
+# split-KV flash decoding: each extra KV split adds one partial
+# (out, m, l) round-trip + processor-side merge per head group
+SPLIT_MERGE_OVERHEAD_S = 2e-6
 
 
 def aux_time(dev: DeviceSpec, model: LLMSpec, batch: int = 1) -> float:
@@ -49,17 +52,27 @@ def gpu_decode_step_time(model: LLMSpec, context: int, dev: DeviceSpec, batch: i
 
 
 def pim_decode_step_time(model: LLMSpec, context: int, dev: DeviceSpec, design: PIMDesign,
-                         batch: int = 1, lbim: bool = False) -> float:
+                         batch: int = 1, lbim: bool = False,
+                         kv_splits: int = 1) -> float:
     """One decode step for `batch` sequences on PIM.
 
     PIM has no weight reuse across the batch — every sequence's GEMV streams
     the weights again (reading IS the compute). This is exactly why PIM wins
     at LOW batch and the paper targets edge, not cloud.
+
+    ``kv_splits`` prices split-KV flash decoding: the KV sweep fans out over
+    that many page-table splits streamed by parallel Pbank groups (the paged
+    analogue of HBCEM's pseudo-bank split), at the cost of one partial
+    (out, m, l) merge per extra split. Splits beat a single pass only once
+    the KV term dominates the merge overhead — i.e. at long context.
     """
     lin_bytes = model.decode_linear_bytes(PIM_BYTES) * batch
     kv_bytes = model.decode_kv_bytes(context, PIM_BYTES) * batch
     t_lin = lin_bytes / design.gemv_bytes_per_s(dev, lbim)
     t_kv = kv_bytes / design.attn_gemv_bytes_per_s(dev, lbim)
+    eff = max(1, min(int(kv_splits), max(int(context), 1)))
+    if eff > 1:
+        t_kv = t_kv / eff + (eff - 1) * SPLIT_MERGE_OVERHEAD_S
     t_io = model.decode_io_bytes() * batch / dev.ext_bw
     return t_lin + t_kv + t_io + aux_time(dev, model, batch)
 

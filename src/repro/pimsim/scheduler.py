@@ -105,12 +105,17 @@ class ReplayReport:
         return self.total_s + self.overlap_saved_s
 
     def to_json(self) -> dict:
-        """JSON-safe export (BENCH_serving.json tracks these across PRs)."""
+        """JSON-safe export (BENCH_serving.json tracks these across PRs).
+
+        ``overlap_saved_s`` is a difference of accumulated float sums; when
+        a schedule has no real overlap it can land at ~1e-17 instead of 0.0
+        and churn the benchmark diff. Exact-zero is the honest export."""
+        overlap = self.overlap_saved_s if abs(self.overlap_saved_s) >= 1e-9 else 0.0
         return {
             "total_s": self.total_s,
             "decode_busy_s": self.decode_busy_s,
             "prefill_busy_s": self.prefill_busy_s,
-            "overlap_saved_s": self.overlap_saved_s,
+            "overlap_saved_s": overlap,
             "serialized_s": self.serialized_s,
             "reused_prefill_tokens": self.reused_prefill_tokens,
             "prefix_saved_s": self.prefix_saved_s,
@@ -136,8 +141,8 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
     * fused steps overlap the halves (``max``), with the controller falling
       back to serialized PIM_MAC_FM whenever overlap would lose — mirroring
       ``lbim_e2e``'s mode switch; split/blocked steps serialize (``+``).
-    * prefix-store hits (``e.reused_tokens``) are prompt tokens the engine
-      *gathered* instead of prefilled: they never enter any step's cost, and
+    * prefix-index hits (``e.reused_tokens``) are prompt tokens the engine
+      *mapped* instead of prefilled: they never enter any step's cost, and
       the report prices what they WOULD have cost as ``prefix_saved_s`` —
       the admission-time saving ``BENCH_serving.json`` tracks.
     * robustness events are priced HONESTLY: a step retried by the
@@ -159,11 +164,14 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
         d_full = d_half = 0.0
         if e.plan.decode and e.decode_batch > 0:
             ctx = max(e.decode_ctx, 1)
+            splits = max(getattr(e, "kv_splits", 1), 1)
             d_full = pim_decode_step_time(model, ctx, dev, design,
-                                          batch=e.decode_batch, lbim=False)
+                                          batch=e.decode_batch, lbim=False,
+                                          kv_splits=splits)
             if e.plan.fused:
                 d_half = pim_decode_step_time(model, ctx, dev, design,
-                                              batch=e.decode_batch, lbim=True)
+                                              batch=e.decode_batch, lbim=True,
+                                              kv_splits=splits)
         p = gpu_prefill_time(model, e.prefill_tokens, dev) if e.prefill_tokens else 0.0
         if e.plan.fused and max(d_half, p) <= d_full + p:
             step, d = max(d_half, p), d_half

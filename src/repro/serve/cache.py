@@ -1,4 +1,4 @@
-"""Typed ``CachePool``: slot table + per-family cache state + prefix reuse.
+"""Typed ``CachePool``: slot table + per-family cache state + paged residency.
 
 The serving engine used to plumb the decode cache around as a raw
 dict-of-arrays: lane surgery lived in ``models.model`` (with a hardcoded
@@ -13,27 +13,35 @@ the cache a typed object instead:
   ``alloc(request) -> slot``, ``insert(slot, prefilled)``, ``retire(slot)``,
   ``views()`` for the decode step, ``commit(new_cache)`` after it. The
   engine never touches a cache key or a family name.
-* The per-family states are typed: :class:`PagedKVState` (dense KV backed by
-  block-paged storage in the paper's §III-C dual layout — K pages
-  column-wise ``(hd, Bsz)``, V pages row-wise ``(Bsz, hd)``),
-  :class:`RingKVState` (gemma2 W-slot rings), :class:`RecurrentState`
-  (RWKV wkv / Mamba ssd — zeroed on retire), :class:`StaticKVState`
-  (audio cross-attention memory). Which states exist is DERIVED from the
-  config's cache structure (:func:`derive_state_specs`), so a new family's
-  novel leaves are zero-on-retire by construction — nothing to hardcode,
-  nothing to leak across slot reuse.
-* :class:`PagedKVState` carries a content-hashed **prefix store**: at
-  insert, full ``block_size``-token blocks of the prompt are cut out of the
-  lane (bit-exact — pages preserve the dual layout) and indexed by the token
-  prefix they encode; at admission, a matching prompt prefix is *gathered*
-  into the staging cache instead of prefilled, so shared system prompts /
-  few-shot headers cost zero prefill tokens after their first request.
-  Shared pages are read-only by construction — lanes are materialized
-  copies, so the first append into a lane never writes a shared page
-  (copy-on-write degenerates to copy-on-insert). The block table drives the
-  gather-materialize path here (reference/dense backends); the same tables
-  feed ``kernels.decode_attention.decode_attention_paged``'s scalar-prefetch
-  index maps on the Pallas backends.
+* Dense/vlm/moe configs (KV is the whole cache state) run **fully paged**:
+  :class:`PagedKVState` owns ONE physical page pool in the paper's §III-C
+  dual layout — K pages column-wise ``(hd, Bsz)``, V pages row-wise
+  ``(Bsz, hd)``, layer-stacked — shared by the live lanes, the in-flight
+  admission stream, and the content-hashed prefix index. Lanes never
+  materialize contiguously: per-slot block tables map logical blocks to
+  physical pages, the decode step appends the new token IN PLACE
+  (``kv_mapping.append_layer_paged``), and the split-KV flash kernel
+  consumes the same tables through scalar-prefetch index maps.
+* Pages are **refcounted**: an active lane's table row, the staging stream's
+  handle, and the prefix index each hold one reference per page, and a page
+  returns to the free list exactly when its count reaches zero — the chaos
+  suite audits this (:meth:`CachePool.check_invariants`) after every fault
+  plan. Shared prefix pages are full blocks strictly below every owner's
+  append point, so the natural flow never writes one; ``ensure_residency``
+  still carries a defensive copy-on-write for adversarial states.
+* **Prefix reuse** is zero-copy now: at insert, full ``block_size``-token
+  blocks of the prompt are *indexed in place* (content-hashed, refcount
+  pinned — nothing is copied out); at admission, a matching prompt prefix
+  enters the staging stream's block table read-only, so shared system
+  prompts cost zero prefill tokens AND zero gather traffic after their
+  first request.
+
+The remaining families keep contiguous lanes: :class:`ContiguousKVState`
+(mixed-family dense KV), :class:`RingKVState` (gemma2 W-slot rings),
+:class:`RecurrentState` (RWKV wkv / Mamba ssd — zeroed on retire),
+:class:`StaticKVState` (audio cross-attention memory). Which states exist is
+DERIVED from the config's cache structure (:func:`derive_state_specs`), so a
+new family's novel leaves are zero-on-retire by construction.
 
 Admission *policy* is derived from the same specs (:class:`AdmissionPolicy`):
 ring states cannot chunk-ingest (solo full prefills), recurrent states
@@ -45,7 +53,7 @@ branches of its own.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Any, Optional, Protocol
 
 import jax
@@ -59,6 +67,11 @@ from repro.serve.errors import (EngineStateError, PoolExhausted,
                                 PoolOccupancy)
 
 FREE, ACTIVE = "free", "active"
+
+# Physical page 0 is a permanently pinned dummy: free lanes' block tables
+# resolve to it so their masked garbage decodes have somewhere harmless to
+# land (the analogue of free lanes writing column 0 of a contiguous lane).
+DUMMY_PAGE = 0
 
 # Leaf names with positional masking or one-shot semantics: everything ELSE
 # in a decode cache is recurrent state that must be zeroed when a lane is
@@ -236,6 +249,12 @@ class _LaneState:
             self.leaves[k] = new_cache[k]
 
 
+class ContiguousKVState(_LaneState):
+    """Dense KV as contiguous dual-layout lanes — the non-paged fallback:
+    mixed-family configs (hybrid/audio, where KV is not the whole state) and
+    pools constructed with ``paged=False`` for A/B testing."""
+
+
 class RingKVState(_LaneState):
     """gemma2 W-slot ring buffers (``k_loc``/``v_loc``): steady-state decode
     structures — admission only via full batch-1 prefill (policy-enforced)."""
@@ -251,32 +270,123 @@ class StaticKVState(_LaneState):
     insert, never appended to, never zeroed."""
 
 
-class PrefixStore:
-    """Content-hashed block-paged prompt-prefix KV (the paper's dual layout
-    per page). Index key ``i`` is the exact token prefix ``prompt[:(i+1)*Bsz]``
-    — chain lookup stops at the first miss, so a hit always denotes a full
-    shared prefix. LRU-evicted at capacity (smarter eviction: ROADMAP)."""
+class _PagesExhausted(Exception):
+    """Internal: the physical page pool ran dry (the pool re-raises this as
+    a :class:`PoolExhausted` carrying its occupancy snapshot)."""
 
-    def __init__(self, n_layers: int, n_kv_heads: int, head_dim: int,
-                 block: int, capacity: int, dtype):
-        self.block = block
-        self.capacity = max(int(capacity), 1)
+
+@dataclass
+class _StagingHandle:
+    """The (single) in-flight admission stream's page residency. ``table``
+    is its logical->physical map; ``fresh`` lists the pages allocated for
+    the stream's OWN writes — the only pages whose content must be copied
+    from the stream's forked arrays into the pool arrays at insert (matched
+    prefix pages are read-only and already live in the pool)."""
+
+    table: np.ndarray
+    fresh: list = field(default_factory=list)
+
+
+class PagedKVState:
+    """Fully paged dense KV: one refcounted physical page pool (the paper's
+    §III-C dual layout per page, layer-stacked) shared by live lanes, the
+    admission stream, and the content-hashed prefix index.
+
+    Steady-state decode runs ON the block tables: ``views()`` exposes
+    ``k_pages``/``v_pages``/``block_table`` and the decode step scatters the
+    new token into each lane's current write page in place — no lane is ever
+    materialized contiguously, and admission never gathers (a prefix hit
+    just enters the shared pages into the stream's table read-only).
+
+    Reference counts per page: one per active-lane table entry, one per
+    staging-handle entry, one per prefix-index pin, plus the permanent
+    :data:`DUMMY_PAGE` pin. A page is free exactly when its count is zero.
+    Shared pages are always FULL blocks strictly below every owner's append
+    point (the prefix match is capped one token short of the prompt and the
+    harvest takes full blocks only), so natural decode never writes a shared
+    page; :meth:`ensure_residency` still copies-on-write defensively when a
+    write block is shared (refcount > 1).
+    """
+
+    def __init__(self, spec: StateSpec, cfg: ModelConfig, n_slots: int,
+                 max_len: int, block_size: int, *, store_pages: int,
+                 prefix_cache: bool, dtype):
+        self.spec = spec
+        self.block_size = int(block_size)
+        # ceil: a ragged max_len just leaves the last block partially filled
+        self.n_blocks = -(-int(max_len) // self.block_size)
+        self.n_slots = int(n_slots)
+        self.prefix_cache = bool(prefix_cache)
+        self.store_capacity = int(store_pages) if self.prefix_cache else 0
+        # worst-case distinct pages: every slot full + the staging stream
+        # full + a saturated prefix index, all disjoint, + the dummy
+        self.capacity = ((self.n_slots + 1) * self.n_blocks
+                         + self.store_capacity + 1)
         self.pages = kv_mapping.init_paged_cache(
-            n_layers, self.capacity, n_kv_heads, head_dim, block, dtype)
+            cfg.n_layers, self.capacity, cfg.n_kv_heads, cfg.head_dim,
+            self.block_size, dtype)
+        self.refcount = np.zeros((self.capacity,), np.int64)
+        self.refcount[DUMMY_PAGE] = 1
+        self._free = list(range(self.capacity - 1, DUMMY_PAGE, -1))
+        self.block_tables = np.full((self.n_slots, self.n_blocks), -1, np.int64)
         self._index: OrderedDict[bytes, int] = OrderedDict()
-        self._free = list(range(self.capacity - 1, -1, -1))
+        self.staging: Optional[_StagingHandle] = None
 
     def __len__(self) -> int:
+        """Indexed prefix entries (``prefix_report``'s ``stored_blocks``)."""
         return len(self._index)
 
-    def _key(self, prompt, i: int) -> bytes:
-        return np.asarray(prompt[: (i + 1) * self.block], np.int32).tobytes()
+    def pages_used(self) -> int:
+        """Referenced pages, dummy excluded."""
+        return int((self.refcount > 0).sum()) - 1
 
-    def match(self, prompt) -> list[int]:
-        """Longest stored block-chain prefix of ``prompt`` — capped one token
-        short of the full prompt (the final token must be prefilled to seed
-        the first decode logits). Returns physical page ids in logical order."""
-        max_blocks = max(len(prompt) - 1, 0) // self.block
+    # -------------------------------------------------------- page refcounts
+
+    def _ref(self, p: int) -> None:
+        self.refcount[p] += 1
+
+    def _unref(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            self._free.append(int(p))
+
+    def _alloc_page(self) -> int:
+        """A fresh page for the caller (refcount 1), evicting LRU
+        store-only entries under pressure."""
+        if self._free:
+            p = self._free.pop()
+            self.refcount[p] = 1
+            return int(p)
+        for key in list(self._index):  # LRU order
+            p = self._index[key]
+            if self.refcount[p] == 1:  # only the index pin holds it
+                del self._index[key]
+                self.refcount[p] = 1   # the pin transfers to the caller
+                return int(p)
+        raise _PagesExhausted(
+            f"no free page among {self.capacity} (all lane- or "
+            f"prefix-referenced)")
+
+    def _drop_row(self, slot: int) -> None:
+        for p in self.block_tables[slot]:
+            if p >= 0:
+                self._unref(int(p))
+        self.block_tables[slot] = -1
+
+    # ----------------------------------------------------------- prefix index
+
+    def _key(self, prompt, i: int) -> bytes:
+        return np.asarray(prompt[: (i + 1) * self.block_size],
+                          np.int32).tobytes()
+
+    def match_prefix(self, prompt) -> list[int]:
+        """Longest indexed block-chain prefix of ``prompt`` — capped one
+        token short of the full prompt (the final token must be prefilled to
+        seed the first decode logits). Returns physical page ids in logical
+        order."""
+        if not self.prefix_cache:
+            return []
+        max_blocks = max(len(prompt) - 1, 0) // self.block_size
         pages: list[int] = []
         for i in range(max_blocks):
             phys = self._index.get(self._key(prompt, i))
@@ -286,120 +396,206 @@ class PrefixStore:
             pages.append(phys)
         return pages
 
-    def _alloc_page(self, protected: set[int]) -> Optional[tuple[int, list[int]]]:
-        """A free physical page, evicting LRU entries if needed — but never a
-        page in ``protected`` (e.g. this call's own earlier chain blocks, so
-        a tiny store can't self-evict mid-chain and alias two logical blocks
-        to one page). Returns (page, evicted page ids) or None."""
-        if self._free:
-            return self._free.pop(), []
-        for key in list(self._index):  # LRU order
-            phys = self._index[key]
-            if phys not in protected:
-                del self._index[key]
-                return phys, [phys]
-        return None
-
-    def put(self, prompt, src_cache: dict, src_slot: int,
-            n_valid: int) -> tuple[list[int], list[int]]:
-        """Harvest every full block of ``prompt[:n_valid]`` from lane
-        ``src_slot`` of ``src_cache`` into the store (dedup by content key).
-        Returns (the prompt's physical page ids — existing + new, the page
-        ids evicted to make room)."""
-        k_lane = src_cache["k"][:, src_slot]   # (nL, H, hd, Lmax)
-        v_lane = src_cache["v"][:, src_slot]   # (nL, H, Lmax, hd)
-        pages: list[int] = []
-        evicted: list[int] = []
-        for i in range(min(n_valid, len(prompt)) // self.block):
+    def harvest(self, slot: int, prompt) -> None:
+        """Index every full prompt block resident in ``slot``'s table —
+        content-addressed and refcount-pinned IN PLACE, no copies. A key
+        collision keeps the already-indexed page (the lane keeps its own
+        bits); at capacity, LRU store-only entries are evicted first and the
+        harvest truncates when nothing is evictable."""
+        if not self.prefix_cache:
+            return
+        for i in range(len(prompt) // self.block_size):
+            p = int(self.block_tables[slot, i])
+            if p < 0:
+                break
             key = self._key(prompt, i)
-            phys = self._index.get(key)
-            if phys is None:
-                alloc = self._alloc_page(protected=set(pages))
-                if alloc is None:
-                    break
-                phys, ev = alloc
-                evicted.extend(ev)
-                kb, vb = kv_mapping.extract_block(k_lane, v_lane, i, self.block)
-                self.pages = kv_mapping.store_block(self.pages, phys, kb, vb)
-                self._index[key] = phys
-            else:
+            if key in self._index:
                 self._index.move_to_end(key)
-            pages.append(phys)
-        return pages, evicted
+            elif len(self._index) < self.store_capacity or self._evict_one():
+                self._index[key] = p
+                self._ref(p)
 
-    def gather(self, pages: list[int]) -> tuple[jax.Array, jax.Array]:
-        """Materialize ``pages`` back to a contiguous dual-layout span."""
-        return kv_mapping.gather_pages(
-            self.pages["k_pages"], self.pages["v_pages"], pages)
+    def _evict_one(self) -> bool:
+        for key in list(self._index):  # LRU order
+            p = self._index[key]
+            if self.refcount[p] == 1:
+                del self._index[key]
+                self._unref(p)
+                return True
+        return False
 
+    # ------------------------------------------------------------- residency
 
-class PagedKVState(_LaneState):
-    """Dense KV: contiguous decode-tier lanes + a block-paged prefix store.
+    def ensure_residency(self, slot: int, pos: int) -> None:
+        """Page-in ``slot``'s current write block before a decode step
+        appends there; copy-on-write when that block is somehow shared."""
+        wb = pos // self.block_size
+        if wb >= self.n_blocks:
+            return  # at max_len: the engine retires before appending
+        p = int(self.block_tables[slot, wb])
+        if p < 0:
+            self.block_tables[slot, wb] = self._alloc_page()
+        elif self.refcount[p] > 1:
+            q = self._alloc_page()
+            self.pages = {
+                "k_pages": self.pages["k_pages"].at[:, q].set(
+                    self.pages["k_pages"][:, p]),
+                "v_pages": self.pages["v_pages"].at[:, q].set(
+                    self.pages["v_pages"][:, p]),
+            }
+            self.block_tables[slot, wb] = q
+            self._unref(p)
 
-    The lanes keep the exact contiguous dual layout the decode step (and the
-    contiguous Pallas kernel) consumes — a lane is the *materialized* view
-    of its blocks, gathered once at insert rather than per step. The prefix
-    store is the paged tier: content-addressed pages shared read-only across
-    requests; ``match``/``gather`` preload a staging cache so matched prompt
-    tokens are never prefilled, and ``insert`` harvests new pages.
-    """
+    def begin_staging(self, pages: list[int]) -> dict:
+        """Open the admission stream: matched prefix pages enter its block
+        table read-only — zero copies, no gather. Returns the stream's
+        batch-1 cache dict (over the POOL arrays; the first step forks)."""
+        self.release_staging()  # defensive: a stale handle leaks pages
+        table = np.full((self.n_blocks,), -1, np.int64)
+        for i, p in enumerate(pages):
+            table[i] = p
+            self._ref(p)
+        self.staging = _StagingHandle(table=table)
+        return {"k_pages": self.pages["k_pages"],
+                "v_pages": self.pages["v_pages"],
+                "block_table": self._staging_table(),
+                "pos": jnp.asarray([len(pages) * self.block_size], jnp.int32)}
 
-    def __init__(self, spec: StateSpec, leaves: dict, cfg: ModelConfig,
-                 block_size: int, prefix_pages: Optional[int] = None,
-                 store: Optional[PrefixStore] = None, enabled: bool = True):
-        super().__init__(spec, leaves)
-        k = self.leaves["k"]                      # (nL, B, H, hd, Lmax)
-        nl, slots, h, hd, lmax = k.shape
-        self.block_size = block_size
-        if store is not None:
-            self.store: Optional[PrefixStore] = store
-        elif enabled:
-            capacity = (prefix_pages if prefix_pages is not None
-                        else 4 * slots * max(lmax // max(block_size, 1), 1))
-            self.store = PrefixStore(nl, h, hd, block_size, capacity, k.dtype)
-        else:
-            # reuse off (flag or family): no page buffers are allocated
-            self.store = None
-        # per-slot logical->physical prefix block table (introspection + the
-        # paged-kernel path; -1 = lane-resident block with no shared page)
-        self.block_tables = np.full(
-            (slots, max(lmax // max(block_size, 1), 1)), -1, np.int64)
+    def _staging_table(self) -> jax.Array:
+        eff = np.where(self.staging.table >= 0, self.staging.table, DUMMY_PAGE)
+        return jnp.asarray(eff[None, :], jnp.int32)
 
-    def match_prefix(self, prompt) -> list[int]:
-        return self.store.match(prompt) if self.store is not None else []
-
-    def preload_prefix(self, staging: dict, pages: list[int]) -> dict:
-        """Gather ``pages`` into columns ``[0, n*Bsz)`` of a fresh batch-1
-        staging cache and advance its fill level — the chunk prefill then
-        starts at the first un-shared token."""
-        if self.store is None:
+    def ensure_staging(self, cache: dict, n_tokens: int) -> dict:
+        """Page-in the stream's next ``n_tokens`` write blocks; returns the
+        stream cache with its block table refreshed."""
+        h = self.staging
+        if h is None:
             raise EngineStateError(
-                "preload_prefix on a PagedKVState with no prefix store "
-                "(prefix caching disabled at pool construction)")
-        n = len(pages) * self.store.block
-        k, v = self.store.gather(pages)
-        out = dict(staging)
-        out["k"] = staging["k"].at[:, 0, :, :, :n].set(
-            k.astype(staging["k"].dtype))
-        out["v"] = staging["v"].at[:, 0, :, :n, :].set(
-            v.astype(staging["v"].dtype))
-        out["pos"] = jnp.asarray([n], jnp.int32)
+                "ensure_staging with no admission stream open")
+        off = int(np.asarray(cache["pos"]).reshape(-1)[0])
+        last = min(off + max(int(n_tokens), 1),
+                   self.n_blocks * self.block_size) - 1
+        for b in range(off // self.block_size, last // self.block_size + 1):
+            if h.table[b] < 0:
+                p = self._alloc_page()
+                h.table[b] = p
+                h.fresh.append(p)
+        out = dict(cache)
+        out["block_table"] = self._staging_table()
         return out
 
-    def harvest(self, slot: int, prompt, src_cache: dict, src_slot: int) -> None:
-        if self.store is None:
+    def release_staging(self) -> None:
+        """Abort the admission stream: every page it references is unpinned
+        (fresh pages return to the free list; shared pages drop one ref)."""
+        h = self.staging
+        if h is None:
             return
-        pages, evicted = self.store.put(prompt, src_cache, src_slot, len(prompt))
-        for phys in evicted:
-            # an evicted page's content is gone: scrub stale references so no
-            # block table ever aliases the recycled physical id
-            self.block_tables[self.block_tables == phys] = -1
-        self.block_tables[slot] = -1
-        self.block_tables[slot, : len(pages)] = pages
+        for p in h.table:
+            if p >= 0:
+                self._unref(int(p))
+        self.staging = None
+
+    # -------------------------------------------------------------- protocol
+
+    def insert(self, src_cache: dict, slot: int, src_slot: int) -> None:
+        self._drop_row(slot)
+        if "k_pages" in src_cache:
+            self._consume_staging(src_cache, slot)
+        else:
+            self._pagify_lane(src_cache, slot, src_slot)
+
+    def _consume_staging(self, src_cache: dict, slot: int) -> None:
+        """Merge the drained stream into lane ``slot``: copy its FRESH pages
+        from the stream's forked arrays into the pool arrays (page-granular
+        aligned copies — the stream and the decode pool wrote disjoint pages
+        since the fork), then hand the table row — and its refcounts — to
+        the slot."""
+        h = self.staging
+        if h is None:
+            raise EngineStateError(
+                "paged insert from a stream cache with no staging handle")
+        if h.fresh:
+            idx = np.asarray(sorted(h.fresh), np.int64)
+            self.pages = {
+                "k_pages": self.pages["k_pages"].at[:, idx].set(
+                    src_cache["k_pages"][:, idx]),
+                "v_pages": self.pages["v_pages"].at[:, idx].set(
+                    src_cache["v_pages"][:, idx]),
+            }
+        self.block_tables[slot] = h.table
+        self.staging = None
+
+    def _pagify_lane(self, src_cache: dict, slot: int, src_slot: int) -> None:
+        """Contiguous prefill source (batch-prefill admission, tests): cut
+        the lane into freshly allocated pages block by block. The lane
+        itself never enters the pool."""
+        k_lane = src_cache["k"][:, src_slot]   # (nL, H, hd, Lmax)
+        v_lane = src_cache["v"][:, src_slot]   # (nL, H, Lmax, hd)
+        pos = int(np.asarray(
+            normalize_pos(src_cache, lane_count(src_cache))["pos"])[src_slot])
+        lpad = self.n_blocks * self.block_size - k_lane.shape[-1]
+        if lpad > 0:  # ragged max_len: square the lane up to the block grid
+            k_lane = jnp.pad(k_lane, ((0, 0), (0, 0), (0, 0), (0, lpad)))
+            v_lane = jnp.pad(v_lane, ((0, 0), (0, 0), (0, lpad), (0, 0)))
+        kd = self.pages["k_pages"].dtype
+        for i in range(min(-(-pos // self.block_size), self.n_blocks)):
+            p = self._alloc_page()
+            kb, vb = kv_mapping.extract_block(k_lane, v_lane, i,
+                                              self.block_size)
+            self.pages = kv_mapping.store_block(
+                self.pages, p, kb.astype(kd), vb.astype(kd))
+            self.block_tables[slot, i] = p
 
     def retire(self, slot: int) -> None:
-        super().retire(slot)
-        self.block_tables[slot] = -1
+        self._drop_row(slot)
+
+    def views(self) -> dict:
+        eff = np.where(self.block_tables >= 0, self.block_tables, DUMMY_PAGE)
+        return {"k_pages": self.pages["k_pages"],
+                "v_pages": self.pages["v_pages"],
+                "block_table": jnp.asarray(eff, jnp.int32)}
+
+    def commit(self, new_cache: dict) -> None:
+        self.pages = {"k_pages": new_cache["k_pages"],
+                      "v_pages": new_cache["v_pages"]}
+
+    def reset_lanes(self) -> None:
+        """Drop every lane row and any staging stream; the prefix index and
+        page CONTENT (the cross-drain asset) survive."""
+        self.release_staging()
+        for slot in range(self.n_slots):
+            self._drop_row(slot)
+
+    # ------------------------------------------------------------------ audit
+
+    def audit(self) -> list[str]:
+        """Refcount bookkeeping must be reconstructible from the references
+        themselves — the chaos suite's page-leak detector."""
+        bad: list[str] = []
+        expect = np.zeros_like(self.refcount)
+        expect[DUMMY_PAGE] += 1
+        for row in self.block_tables:
+            for p in row:
+                if p >= 0:
+                    expect[p] += 1
+        if self.staging is not None:
+            for p in self.staging.table:
+                if p >= 0:
+                    expect[p] += 1
+        for p in self._index.values():
+            expect[p] += 1
+        if not (expect == self.refcount).all():
+            drift = np.nonzero(expect != self.refcount)[0].tolist()
+            bad.append(f"page refcount drift on pages {drift[:8]} "
+                       f"(expected from refs != stored)")
+        if len(self._free) != len(set(self._free)):
+            bad.append("free list contains duplicate pages")
+        free = sorted(int(p) for p in self._free)
+        zero = sorted(np.nonzero(self.refcount == 0)[0].tolist())
+        if free != zero:
+            bad.append(f"free list does not equal zero-refcount pages "
+                       f"(free={len(free)}, zero-ref={len(zero)})")
+        return bad
 
 
 # ===========================================================================
@@ -424,17 +620,20 @@ class CachePool:
     """The slot pool: table + typed per-family states + admission policy.
 
     One protocol for every family: ``alloc``/``insert``/``retire`` do the
-    lane surgery, ``views()`` hands the decode step its cache dict,
-    ``commit()`` takes the step's output back (pinning free lanes' fill to
-    0 so their dummy decodes never overflow). ``stage_admission`` builds the
-    batch-1 staging cache for chunked prefill — preloaded from the prefix
-    store on a hit. The prefix store survives :meth:`reset`, so reuse works
-    across drains of the same engine.
+    lane surgery, ``views()`` hands the decode step its cache dict (for
+    paged pools: pages + block tables, with active lanes' write blocks
+    paged-in), ``commit()`` takes the step's output back (pinning free
+    lanes' fill to 0 so their dummy decodes never overflow).
+    ``stage_admission`` opens the chunk-prefill stream — on a prefix hit the
+    shared pages enter its block table read-only, nothing is gathered or
+    copied. The prefix index survives :meth:`reset`, so reuse works across
+    drains of the same engine.
     """
 
     def __init__(self, cfg: ModelConfig, max_len: int, n_slots: int, *,
                  prefix_cache: bool = True, block_size: int = 8,
-                 prefix_pages: Optional[int] = None):
+                 prefix_pages: Optional[int] = None,
+                 paged: Optional[bool] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.n_slots = n_slots
@@ -442,41 +641,56 @@ class CachePool:
         self.prefix_pages = prefix_pages
         self.specs = derive_state_specs(cfg)
         self.policy = derive_policy(self.specs)
-        self.prefix_cache = bool(prefix_cache and self.policy.prefix_capable
-                                 and block_size > 0)
+        # fully paged residency requires KV to be the whole cache state;
+        # `paged=False` forces the contiguous A/B path. A max_len off the
+        # block grid is fine — the lane's last block stays partially filled.
+        pageable = self.policy.prefix_capable and block_size > 0
+        self.paged = pageable if paged is None else bool(paged) and pageable
+        self.prefix_cache = bool(prefix_cache and self.paged)
         self.stats = {"prefix_lookups": 0, "prefix_hits": 0,
                       "reused_prefix_tokens": 0}
-        self._build(keep_store=None)
+        self._build(keep_kv=None)
 
     # ------------------------------------------------------------- lifecycle
 
-    def _make_state(self, spec: StateSpec, leaves: dict,
-                    store: Optional[PrefixStore]) -> CacheState:
+    def _make_state(self, spec: StateSpec, leaves: dict) -> CacheState:
+        if spec.kind == "paged_kv" and self.paged:
+            nb = -(-self.max_len // self.block_size)
+            store_pages = (self.prefix_pages if self.prefix_pages is not None
+                           else 4 * self.n_slots * nb)
+            return PagedKVState(
+                spec, self.cfg, self.n_slots, self.max_len, self.block_size,
+                store_pages=store_pages, prefix_cache=self.prefix_cache,
+                dtype=M.kv_cache_dtype(self.cfg))
         if spec.kind == "paged_kv":
-            return PagedKVState(spec, leaves, self.cfg, self.block_size,
-                                self.prefix_pages, store=store,
-                                enabled=self.prefix_cache)
+            return ContiguousKVState(spec, leaves)
         cls = {"ring": RingKVState, "recurrent": RecurrentState,
                "static": StaticKVState}[spec.kind]
         return cls(spec, leaves)
 
-    def _build(self, keep_store: Optional[PrefixStore]) -> None:
-        cache = normalize_pos(
-            M.init_decode_cache(self.cfg, self.n_slots, self.max_len),
-            self.n_slots)
-        self.states: list[CacheState] = [
-            self._make_state(s, cache, keep_store) for s in self.specs]
-        self._pos = cache["pos"]
+    def _build(self, keep_kv: Optional[PagedKVState]) -> None:
+        if self.paged:
+            # KV is the whole state: no contiguous lane arrays exist at all
+            if keep_kv is not None:
+                keep_kv.reset_lanes()
+                self.states: list[CacheState] = [keep_kv]
+            else:
+                self.states = [self._make_state(self.specs[0], {})]
+            self._pos = jnp.zeros((self.n_slots,), jnp.int32)
+        else:
+            cache = normalize_pos(
+                M.init_decode_cache(self.cfg, self.n_slots, self.max_len),
+                self.n_slots)
+            self.states = [self._make_state(s, cache) for s in self.specs]
+            self._pos = cache["pos"]
         self.slots: list[SlotInfo] = [SlotInfo() for _ in range(self.n_slots)]
 
     def reset(self) -> None:
-        """Fresh lanes, slot table, and per-drain stats; the prefix store
-        (the cross-drain asset) is retained."""
-        kv = self._kv
-        self._build(keep_store=kv.store
-                    if (kv is not None and self.prefix_cache) else None)
+        """Fresh lanes, slot table, and per-drain stats; the prefix index
+        and its page content (the cross-drain asset) are retained."""
+        self._build(keep_kv=self._kv)
         # stats are per drain, like the engine's event stream — only the
-        # store's CONTENT outlives a serve() call
+        # index CONTENT outlives a serve() call
         self.stats = {"prefix_lookups": 0, "prefix_hits": 0,
                       "reused_prefix_tokens": 0}
 
@@ -507,25 +721,27 @@ class CachePool:
         """Point-in-time capacity snapshot (attached to every
         :class:`PoolExhausted`, surfaced by ``Engine.health()``)."""
         kv = self._kv
-        store = kv.store if kv is not None else None
-        pins: set[int] = set()
-        if kv is not None:
-            for si in self.active_slots():
-                pins |= {int(p) for p in kv.block_tables[si] if p >= 0}
+        if kv is None:
+            return PoolOccupancy(
+                slots_total=self.n_slots,
+                slots_used=len(self.active_slots()),
+                pages_total=0, pages_used=0, prefix_pins=0)
+        indexed = set(kv._index.values())
+        pinned = {p for p in indexed if kv.refcount[p] > 1}
         return PoolOccupancy(
             slots_total=self.n_slots,
             slots_used=len(self.active_slots()),
-            pages_total=store.capacity if store is not None else 0,
-            pages_used=len(store) if store is not None else 0,
-            prefix_pins=len(pins),
+            pages_total=kv.capacity - 1,   # dummy excluded
+            pages_used=kv.pages_used(),
+            prefix_pins=len(pinned),
         )
 
     def check_invariants(self) -> list[str]:
         """Audit cache accounting; returns violation descriptions (empty =
         healthy). The chaos suite runs this after every fault plan: whatever
-        was injected, retire/preempt paths must leave no leaked lane, no
-        dangling block-table reference, and a store whose free list + index
-        exactly partition its physical pages."""
+        was injected, retire/preempt paths must release every page exactly
+        once — refcounts must be reconstructible from the live references,
+        and the free list must equal the zero-refcount pages."""
         bad: list[str] = []
         pos = np.asarray(self._pos)
         for i, s in enumerate(self.slots):
@@ -533,24 +749,12 @@ class CachePool:
                 bad.append(f"free slot {i} has pos={int(pos[i])} (expected 0)")
         kv = self._kv
         if kv is not None:
-            store = kv.store
+            bad += kv.audit()
             for i, s in enumerate(self.slots):
                 if s.state == FREE and (kv.block_tables[i] >= 0).any():
-                    bad.append(f"free slot {i} still references prefix pages "
-                               f"{sorted(int(p) for p in kv.block_tables[i] if p >= 0)}")
-            if store is not None:
-                live = set(store._index.values())
-                refd = {int(p) for p in kv.block_tables.ravel() if p >= 0}
-                if refd - live:
-                    bad.append(f"block tables reference non-resident pages "
-                               f"{sorted(refd - live)}")
-                claimed = sorted(store._free) + sorted(live)
-                if sorted(claimed) != list(range(store.capacity)):
                     bad.append(
-                        f"store free list + index do not partition "
-                        f"{store.capacity} pages (free={len(store._free)}, "
-                        f"indexed={len(live)}, "
-                        f"overlap={sorted(set(store._free) & live)})")
+                        f"free slot {i} still holds pages "
+                        f"{sorted(int(p) for p in kv.block_tables[i] if p >= 0)}")
         return bad
 
     # -------------------------------------------------------------- protocol
@@ -584,25 +788,49 @@ class CachePool:
     def insert(self, slot: int, prefilled: dict, *, src_slot: int = 0,
                prompt=None) -> None:
         """Drop lane ``src_slot`` of a prefilled cache into lane ``slot``;
-        with ``prompt``, harvest its full blocks into the prefix store."""
+        with ``prompt``, harvest its full blocks into the prefix index.
+        For paged pools the source is either the drained admission stream
+        (pages merged, table row transferred) or a contiguous prefill
+        (pagified block by block)."""
+        kv = self._kv
+        if kv is not None:
+            try:
+                kv.insert(prefilled, slot, src_slot)
+            except _PagesExhausted as e:
+                raise PoolExhausted(str(e), self.occupancy()) from None
+            src_pos = jnp.reshape(
+                jnp.asarray(prefilled["pos"], jnp.int32), (-1,))
+            src_pos = src_pos[src_slot if src_pos.shape[0] > 1 else 0]
+            self._pos = self._pos.at[slot].set(src_pos)
+            if self.prefix_cache and prompt is not None:
+                kv.harvest(slot, prompt)
+            return
         for st in self.states:
             st.insert(prefilled, slot, src_slot)
         src_pos = normalize_pos(prefilled, lane_count(prefilled))["pos"][src_slot]
         self._pos = self._pos.at[slot].set(src_pos)
-        kv = self._kv
-        if self.prefix_cache and prompt is not None and kv is not None:
-            kv.harvest(slot, prompt, prefilled, src_slot)
 
     def retire(self, slot: int) -> None:
-        """Free lane ``slot``: zero spec-derived recurrent state, pin fill
-        to 0 (KV stays as masked dead weight)."""
+        """Free lane ``slot``: release its pages (paged), zero spec-derived
+        recurrent state, pin fill to 0."""
         for st in self.states:
             st.retire(slot)
         self._pos = self._pos.at[slot].set(0)
         self.slots[slot] = replace(self.slots[slot], state=FREE)
 
     def views(self) -> dict:
-        """The decode-step cache dict (contiguous dual-layout lanes)."""
+        """The decode-step cache dict. Paged pools page-in every active
+        lane's current write block here (host-side residency, idempotent —
+        a retried step re-ensures the same pages)."""
+        kv = self._kv
+        if kv is not None:
+            pos = np.asarray(self._pos)
+            try:
+                for i, s in enumerate(self.slots):
+                    if s.state == ACTIVE:
+                        kv.ensure_residency(i, int(pos[i]))
+            except _PagesExhausted as e:
+                raise PoolExhausted(str(e), self.occupancy()) from None
         out: dict = {}
         for st in self.states:
             out.update(st.views())
@@ -612,7 +840,7 @@ class CachePool:
     def commit(self, new_cache: dict) -> None:
         """Absorb a decode step's updated cache. Free lanes decode garbage
         each step; their fill level is pinned back to 0 here so the dummy KV
-        write keeps landing at column 0 and never overflows."""
+        write keeps landing at block 0 (the dummy page) and never overflows."""
         for st in self.states:
             st.commit(new_cache)
         free = np.zeros((self.n_slots,), bool)
@@ -623,7 +851,9 @@ class CachePool:
     # ----------------------------------------------------------- admission
 
     def init_staging(self, batch: int = 1) -> dict:
-        """A fresh admission staging cache (same layout, ``batch`` lanes)."""
+        """A fresh CONTIGUOUS admission staging cache (non-paged pools and
+        batch-prefill admission; paged streams open via
+        :meth:`stage_admission`)."""
         return normalize_pos(
             M.init_decode_cache(self.cfg, batch, self.max_len), batch)
 
@@ -635,32 +865,54 @@ class CachePool:
         return len(kv.match_prefix(prompt)) * kv.block_size
 
     def stage_admission(self, prompt) -> tuple[dict, int]:
-        """Build the batch-1 staging cache for chunk-prefilling ``prompt``.
+        """Open the batch-1 admission stream for chunk-prefilling ``prompt``.
 
-        On a prefix hit the matched pages are gathered into the staging
-        lanes and the fill level advanced — the returned ``skip`` is the
-        number of prompt tokens the engine must NOT prefill.
+        Paged pools: the stream shares the pool's page arrays; on a prefix
+        hit the matched pages enter its block table read-only and the fill
+        level starts beyond them — the returned ``skip`` is the number of
+        prompt tokens the engine must NOT prefill. No page is copied and
+        nothing is gathered. Exactly one stream may be open at a time; the
+        engine merges it via :meth:`insert` or aborts it via
+        :meth:`release_staging`.
         """
-        staging = self.init_staging(1)
         kv = self._kv
-        if not self.prefix_cache or kv is None:
-            return staging, 0
+        if kv is None:
+            return self.init_staging(1), 0
+        if not self.prefix_cache:
+            return kv.begin_staging([]), 0
         self.stats["prefix_lookups"] += 1
         pages = kv.match_prefix(prompt)
-        if not pages:
-            return staging, 0
         skip = len(pages) * kv.block_size
-        self.stats["prefix_hits"] += 1
-        self.stats["reused_prefix_tokens"] += skip
-        return kv.preload_prefix(staging, pages), skip
+        if pages:
+            self.stats["prefix_hits"] += 1
+            self.stats["reused_prefix_tokens"] += skip
+        return kv.begin_staging(pages), skip
+
+    def staging_step_prep(self, cache: dict, n_tokens: int) -> dict:
+        """Page-in the admission stream's next ``n_tokens`` write blocks
+        (paged pools; contiguous staging passes through untouched). Called
+        by the engine before every chunk step; idempotent under retries."""
+        kv = self._kv
+        if kv is None or "k_pages" not in cache:
+            return cache
+        try:
+            return kv.ensure_staging(cache, n_tokens)
+        except _PagesExhausted as e:
+            raise PoolExhausted(str(e), self.occupancy()) from None
+
+    def release_staging(self) -> None:
+        """Abort the in-flight admission stream, releasing its pages
+        (no-op when none is open or the pool is contiguous)."""
+        kv = self._kv
+        if kv is not None:
+            kv.release_staging()
 
     def prefix_report(self) -> dict:
-        """Per-drain stats (reset with the slot table) + store occupancy."""
+        """Per-drain stats (reset with the slot table) + index occupancy."""
         kv = self._kv
-        store = kv.store if kv is not None else None
         return {
             "enabled": self.prefix_cache,
-            "block_size": self.block_size if store is not None else 0,
-            "stored_blocks": len(store) if store is not None else 0,
+            "block_size": self.block_size if self.prefix_cache else 0,
+            "stored_blocks": len(kv) if kv is not None else 0,
             **self.stats,
         }

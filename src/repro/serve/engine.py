@@ -52,9 +52,8 @@ padded, so state-carrying families stream through the same path.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Union
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +84,7 @@ class ScheduleEvent:
     attempts: int = 1       # 1 + ladder retries this step (pimsim prices all)
     slow_penalty: int = 0   # injected slow-step clock penalty (engine steps)
     degraded: bool = False  # step ran below its base backend rungs
+    kv_splits: int = 1      # paged decode KV-split fan-out (pimsim pricing)
 
 
 class ScheduleReport(dict):
@@ -115,7 +115,8 @@ def _finite(logits, active, pre_logits) -> bool:
 class _Prefill:
     """One in-flight chunked admission (no lane reserved — it parks when
     loaded and drops into the next freed slot). ``off`` starts beyond the
-    prefix-store hit: those tokens are gathered, never prefilled."""
+    prefix-index hit: those blocks enter the stream's block table read-only,
+    never prefilled and never copied."""
     req: int
     toks: np.ndarray        # (1, n) full prompt
     cache: dict             # batch-1 cache being filled chunk by chunk
@@ -343,8 +344,10 @@ class Engine:
                 queue.remove(r)
             if stream is not None and stream.req == r:
                 stream = None
+                pool.release_staging()  # the stream's pages go back
             if ready is not None and ready.req == r:
                 ready = None
+                pool.release_staging()  # its un-inserted handle too
             for si in pool.active_slots():
                 if pool.get(si).req == r:
                     pool.retire(si)
@@ -410,7 +413,7 @@ class Engine:
 
             # -- drained pool, nothing staged: batch-prefill straight into
             # lanes (prefix-hit requests fall through to the chunk-streaming
-            # path below so their shared blocks are gathered, not recomputed)
+            # path below so their shared blocks are mapped, not recomputed)
             if not active and stream is None and ready is None and queue:
                 if self._admit_batch(queue, cur_tok, emit):
                     continue
@@ -449,6 +452,10 @@ class Engine:
                 else:
                     c = stream.remaining
             plan = plan_step(self.mode, bool(active), stream is not None, c)
+            if stream is not None and c > 0:
+                # page-in the stream's write blocks for this quantum
+                # (host-side residency; idempotent under ladder retries)
+                stream.cache = pool.staging_step_prep(stream.cache, c)
 
             # ---- guarded step execution: compute WITHOUT mutating pool or
             # stream; on a kernel exception or NaN/Inf trip, demote the
@@ -536,7 +543,9 @@ class Engine:
                 plan, len(active), c if plan.prefill_chunk else 0,
                 max((pool.get(i).ctx for i in active), default=0),
                 self._take_reuse(), attempts=attempts, slow_penalty=slow,
-                degraded=ladder.is_degraded()))
+                degraded=ladder.is_degraded(),
+                kv_splits=(max(1, self.cfg.decode_kv_splits)
+                           if plan.decode and pool.paged else 1)))
 
             if not step_ok:
                 # fail ONLY the step's participants; parked/queued requests
@@ -555,6 +564,7 @@ class Engine:
                     results[stream.req].finish_reason = FINISH_FAILED
                     results[stream.req].error = err
                     stream = None
+                    pool.release_staging()
                 continue
 
             if new_cache is not None:
@@ -587,6 +597,7 @@ class Engine:
                 stream = None
 
         self._in_serve = False
+        pool.release_staging()  # defensive: no handle outlives a serve()
         for r in range(n):  # terminal contract: nothing is left in flight
             if results[r].state not in TERMINAL_STATES:
                 results[r].state = RequestState.FAILED
@@ -613,27 +624,6 @@ class Engine:
                 f"cancel({request_index}): no such request in the in-flight "
                 f"serve ({len(self._reqs)} requests)")
         self._cancel.add(request_index)
-
-    def generate(self, prompts: list[list[int]],
-                 max_new: Union[int, Sequence[int]] = 16,
-                 eos_id: Optional[int] = None) -> list[list[int]]:
-        """DEPRECATED batch-synchronous shim over :meth:`serve`.
-
-        Constructs one greedy ``GenerationRequest`` per prompt (``max_new``
-        may be a single budget or one per request; ``eos_id`` overrides the
-        config's for every request) and returns bare token lists.
-        """
-        warnings.warn(
-            "Engine.generate(prompts) is deprecated; build GenerationRequest "
-            "objects and call Engine.serve(requests)",
-            DeprecationWarning, stacklevel=2)
-        n = len(prompts)
-        budgets = [max_new] * n if isinstance(max_new, int) else list(max_new)
-        if len(budgets) != n:
-            raise ValueError("one max_new per prompt")
-        reqs = [GenerationRequest(prompt=p, max_new_tokens=b, eos_id=eos_id)
-                for p, b in zip(prompts, budgets)]
-        return [res.tokens for res in self.serve(reqs)]
 
     def _take_reuse(self) -> int:
         r, self._pending_reuse = self._pending_reuse, 0

@@ -107,16 +107,20 @@ class ServingModel:
 
     def cache_pool(self, *, slots: Optional[int] = None,
                    prefix_cache: bool = True, block_size: int = 8,
-                   prefix_pages: Optional[int] = None):
+                   prefix_pages: Optional[int] = None,
+                   paged: Optional[bool] = None):
         """A typed :class:`repro.serve.cache.CachePool` over this artifact:
         slot table + per-family state objects + the content-hashed prefix
-        store, in the prepared dual layout."""
+        index, in the prepared dual layout. ``paged=None`` auto-selects
+        fully paged residency when the config supports it (KV-only cache,
+        block-aligned ``max_len``); ``paged=False`` forces contiguous lanes
+        for A/B comparison."""
         from repro.serve.cache import CachePool
 
         return CachePool(self.cfg, self.max_len,
                          self.slots if slots is None else slots,
                          prefix_cache=prefix_cache, block_size=block_size,
-                         prefix_pages=prefix_pages)
+                         prefix_pages=prefix_pages, paged=paged)
 
     def engine(self, *, slots: Optional[int] = None, mode: Mode = Mode.HBCEM,
                chunk: int = 8, prefix_cache: bool = True):

@@ -9,6 +9,10 @@ Acceptance criteria of the cache-API redesign PR:
 * a shared-prefix workload emits tokens bit-identical to cold prefill across
   BLOCKED/HBCEM/LBIM while ``schedule_report()`` shows strictly fewer
   prefill tokens, and the timing model prices the skipped prefill;
+* fully paged steady-state decode (refcounted page pool + per-slot block
+  tables, in-place appends, zero-copy prefix sharing) emits tokens
+  bit-identical to the contiguous pool across modes, prefix settings and
+  mid-decode preemption, with page refcounts audited after every scenario;
 * the block-paged decode-attention path (scalar-prefetch block table) is
   bit-compatible with the contiguous kernel on both reference and interpret
   backends.
@@ -99,6 +103,18 @@ def test_reset_lane_zeroes_unknown_leaves():
 # ===========================================================================
 
 
+def _paged_lane(pool, slot, pos):
+    """Materialize one paged lane's live span for comparison (tests only —
+    the serving path never does this)."""
+    from repro.core import kv_mapping
+
+    kv = pool._kv
+    live = [int(p) for p in kv.block_tables[slot] if p >= 0]
+    k, v = kv_mapping.gather_pages(kv.pages["k_pages"], kv.pages["v_pages"],
+                                   live)
+    return k[:, :, :, :pos], v[:, :, :pos, :]
+
+
 @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
 def test_insert_retire_insert_roundtrip(family):
     cfg = FAMILY_CONFIGS[family]()
@@ -112,13 +128,36 @@ def test_insert_retire_insert_roundtrip(family):
     assert si == 0 and pool.active_slots() == [0]
     pool.insert(1, a, prompt=[1, 2, 3, 4])  # surgery targets any lane
     views = pool.views()
+    assert int(views["pos"][1]) == 4 and int(views["pos"][2]) == 0
+
+    if pool.paged:
+        assert family == "dense"
+        k1, v1 = _paged_lane(pool, 1, 4)
+        assert (k1 == a["k"][:, 0, :, :, :4]).all()
+        assert (v1 == a["v"][:, 0, :, :4, :]).all()
+        # cross-slot isolation: untouched lanes own no pages at all
+        kv = pool._kv
+        assert (kv.block_tables[2] < 0).all()
+        used = pool.occupancy().pages_used
+        pool.retire(1)
+        # paged retire FREES the lane's pages — no dead weight behind pos=0
+        assert pool.occupancy().pages_used < used
+        assert int(pool.views()["pos"][1]) == 0
+        assert (kv.block_tables[1] < 0).all()
+        pool.insert(1, b, prompt=[9, 8, 7])
+        views = pool.views()
+        k1, v1 = _paged_lane(pool, 1, 3)
+        assert (k1 == b["k"][:, 0, :, :, :3]).all()
+        assert (v1 == b["v"][:, 0, :, :3, :]).all()
+        assert int(views["pos"][1]) == 3
+        return
+
     for key, leaf in views.items():
         if key == "pos":
             continue
         assert jnp.allclose(leaf[:, 1], a[key][:, 0]), (family, key)
         # cross-slot isolation: untouched lanes stay zero-initialized
         assert float(jnp.sum(jnp.abs(leaf[:, 2]))) == 0.0, (family, key)
-    assert int(views["pos"][1]) == 4 and int(views["pos"][2]) == 0
 
     pool.retire(1)
     views = pool.views()
@@ -220,33 +259,40 @@ def test_replay_prices_skipped_prefill(dense_setup):
 
 
 def test_disabled_prefix_allocates_no_store():
-    """--no-prefix-cache (or an incapable family) must not pay for page
-    buffers: the store is absent, not merely unused."""
+    """--no-prefix-cache (or an incapable family) must not pay for index
+    capacity: the page pool is sized without a store share and pins
+    nothing."""
     pool = CachePool(FAMILY_CONFIGS["dense"](), MAX_LEN, 2, prefix_cache=False)
     kv = pool._kv
-    assert kv is not None and kv.store is None
+    assert kv is not None and kv.store_capacity == 0 and len(kv) == 0
+    nb = MAX_LEN // pool.block_size
+    assert kv.capacity == (pool.n_slots + 1) * nb + 1  # no store share
     assert pool.peek_prefix([1, 2, 3, 4, 5]) == 0
     assert pool.stage_admission([1, 2, 3, 4, 5])[1] == 0
+    pool.release_staging()
     assert pool.prefix_report()["stored_blocks"] == 0
+    assert not pool.check_invariants()
 
 
 def test_tiny_store_never_self_evicts_mid_chain():
-    """A store smaller than one prompt's chain must truncate the harvest,
-    not evict its own earlier blocks (which would alias two logical blocks
-    to one physical page in the recorded block table)."""
+    """An index smaller than one prompt's chain must truncate the harvest,
+    not evict its own earlier blocks (which would break the chain walk a
+    later match performs)."""
     cfg = FAMILY_CONFIGS["dense"]()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     pool = CachePool(cfg, MAX_LEN, 2, block_size=4, prefix_pages=2)
-    prompt = list(range(1, 14))  # 3 full blocks of 4
+    prompt = list(range(1, 14))  # 3 full blocks of 4 (+ 1 tail token)
+    pool.alloc(GenerationRequest(prompt=prompt, max_new_tokens=2), rid=0)
     pool.insert(0, _prefill_one(cfg, params, prompt), prompt=prompt)
     kv = pool._kv
-    assert kv is not None and kv.store is not None
+    assert kv is not None and len(kv) == 2     # third block truncated
     table = kv.block_tables[0]
     live = table[table >= 0]
-    assert len(live) == 2                      # third block truncated
+    assert len(live) == 4                      # whole prompt stays resident
     assert len(set(live.tolist())) == len(live)  # no aliasing
-    # the stored chain still matches a sharing prompt
+    # the indexed chain still matches a sharing prompt
     assert pool.peek_prefix(prompt) == 8
+    assert not pool.check_invariants()
 
 
 def test_prefix_stats_are_per_drain(dense_setup):
@@ -282,7 +328,112 @@ def test_prefix_disabled_for_stateful_families():
 
 
 # ===========================================================================
-# block-paged decode attention (gather path and scalar-prefetch kernel)
+# fully paged steady-state decode: identity sweep + page accounting
+# ===========================================================================
+
+
+@pytest.mark.parametrize("mode", [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM])
+@pytest.mark.parametrize("prefix", [True, False])
+def test_paged_decode_matches_contiguous_pool(dense_setup, mode, prefix):
+    """Tentpole acceptance: the fully paged pool's greedy tokens are
+    IDENTICAL to the contiguous pool's across modes and prefix settings —
+    the decode path changed residency, not one bit of arithmetic."""
+    from repro.serve.engine import Engine
+
+    cfg, params, sm = dense_setup
+    prompts = [SHARED + t for t in TAILS[:3]]
+
+    def reqs():
+        return [GenerationRequest(prompt=p, max_new_tokens=4) for p in prompts]
+
+    eng_p = sm.engine(mode=mode, chunk=4, prefix_cache=prefix)
+    assert eng_p.pool.paged
+    eng_c = Engine(cfg, params, max_len=64, slots=2, mode=mode, chunk=4,
+                   serving=sm, prefix_cache=False,
+                   pool=sm.cache_pool(slots=2, prefix_cache=False,
+                                      block_size=4, paged=False))
+    assert not eng_c.pool.paged
+    tp = [r.tokens for r in eng_p.serve(reqs())]
+    tc = [r.tokens for r in eng_c.serve(reqs())]
+    assert tp == tc, (mode, prefix)
+    assert not eng_p.pool.check_invariants()
+
+
+def test_stateful_families_fall_back_to_contiguous():
+    """Paged residency is only sound when KV is the whole cache state; the
+    other families keep contiguous lanes even when asked to page."""
+    for name in ("ring", "ssm", "hybrid"):
+        pool = CachePool(FAMILY_CONFIGS[name](), MAX_LEN, 2, paged=True)
+        assert not pool.paged, name
+        assert pool._kv is None, name
+    # a block size off the max_len grid still pages: the block count rounds
+    # up and the tail block just never fills completely
+    pool = CachePool(FAMILY_CONFIGS["dense"](), 30, 2, block_size=8)
+    assert pool.paged
+    assert pool._kv.n_blocks == 4
+
+
+def test_paged_preemption_releases_pages_once(dense_setup):
+    """A priority preemption mid-decode retires the victim's pages exactly
+    once, and its resumed decode is bit-identical to an undisturbed run."""
+    from repro.serve.engine import Engine
+
+    cfg, params, sm = dense_setup
+    lo = GenerationRequest(prompt=SHARED + [42], max_new_tokens=6, priority=0)
+    hi = GenerationRequest(prompt=[5, 4, 3, 2, 1], max_new_tokens=4, priority=5)
+    eng = Engine(cfg, params, max_len=64, slots=1, chunk=4, serving=sm,
+                 pool=sm.cache_pool(slots=1, block_size=4))
+    assert eng.pool.paged
+    res = eng.serve([lo, hi])
+    assert res[0].preemptions >= 1          # the underdog was evicted
+    assert not eng.pool.check_invariants()  # ...and its pages came back once
+    cold = [ref_generate(cfg, params, r.prompt, r.max_new_tokens)
+            for r in (lo, hi)]
+    assert [r.tokens for r in res] == cold
+
+
+def test_shared_write_block_copies_on_write():
+    """Defensive copy-on-write: when a lane's write block is shared
+    (refcount > 1), the page is forked before any append can land on it."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    pool = CachePool(cfg, MAX_LEN, 2, block_size=4)
+    kv = pool._kv
+    p = kv._alloc_page()
+    kv.block_tables[0, 0] = p
+    kv.block_tables[1, 0] = p
+    kv._ref(p)  # second table reference -> p is shared
+    kv.pages = {"k_pages": kv.pages["k_pages"].at[:, p].set(1.0),
+                "v_pages": kv.pages["v_pages"].at[:, p].set(1.0)}
+    kv.ensure_residency(0, 2)  # mid-block append point on the shared page
+    q = int(kv.block_tables[0, 0])
+    assert q != p and int(kv.block_tables[1, 0]) == p
+    assert int(kv.refcount[p]) == 1 and int(kv.refcount[q]) == 1
+    assert (kv.pages["k_pages"][:, q] == kv.pages["k_pages"][:, p]).all()
+    assert (kv.pages["v_pages"][:, q] == kv.pages["v_pages"][:, p]).all()
+    assert not kv.audit()
+
+
+def test_staging_abort_returns_pages():
+    """Dropping an in-flight admission stream (cancel/failure) releases its
+    fresh pages and unpins any shared prefix pages — exactly once."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pool = CachePool(cfg, MAX_LEN, 2, block_size=4)
+    prompt = list(range(1, 10))
+    pool.alloc(GenerationRequest(prompt=prompt, max_new_tokens=2), rid=0)
+    pool.insert(0, _prefill_one(cfg, params, prompt), prompt=prompt)
+    before = pool.occupancy().pages_used
+    cache, skip = pool.stage_admission(prompt)      # hits the indexed chain
+    assert skip == 8
+    cache = pool.staging_step_prep(cache, 1)        # + one fresh write page
+    assert pool.occupancy().pages_used == before + 1
+    pool.release_staging()
+    assert pool.occupancy().pages_used == before
+    assert not pool.check_invariants()
+
+
+# ===========================================================================
+# block-paged decode attention (in-place append and scalar-prefetch kernel)
 # ===========================================================================
 
 

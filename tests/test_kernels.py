@@ -5,8 +5,11 @@ import numpy as np
 import pytest
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
-from repro.kernels.decode_attention.ops import decode_attention_op
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.core.kv_mapping import init_paged_cache
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_paged_op)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                materialize_pages)
 from repro.kernels.pim_gemv.ops import linear_w8a8, pim_gemv_int8
 from repro.kernels.pim_gemv.ref import pim_gemv_ref, quantize_ref
 from repro.kernels.ssd_scan.ops import ssd_scan_op
@@ -121,6 +124,102 @@ def test_decode_attention_ignores_cache_beyond_pos():
     v2 = v.at[:, :, pos:, :].set(-1e4)
     out2 = decode_attention_op(q, k2, v2, pos, scale=0.125, block_l=128, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# paged decode attention: split-KV flash decoding
+# --------------------------------------------------------------------------
+
+def _paged_setup(seed=7, b=2, hkv=2, g=2, hd=32, page=16, nb=8):
+    """Random page pool + a scrambled block table (page 0 left as the unused
+    dummy, like the serving pool)."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((b, hkv * g, hd)), jnp.float32)
+    kp = jnp.asarray(r.standard_normal((b * nb + 1, hkv, hd, page)),
+                     jnp.float32) * 0.3
+    vp = jnp.asarray(r.standard_normal((b * nb + 1, hkv, page, hd)),
+                     jnp.float32) * 0.3
+    table = jnp.asarray(r.permutation(b * nb).reshape(b, nb) + 1, jnp.int32)
+    return q, kp, vp, table, page * nb
+
+
+@pytest.mark.parametrize("frac", [8, 2, 1])          # fill fraction of Lmax
+@pytest.mark.parametrize("splits", [2, 4, 8, 16])    # 16 > NB: clamp path
+def test_paged_split_matches_single_pass(frac, splits):
+    """Tentpole acceptance: the two-stage split-KV reduction == the
+    single-pass paged kernel at every fill level, including fills that leave
+    trailing splits completely dead (fill 1/8 with 8 splits) and split
+    counts beyond the block count (clamped)."""
+    q, kp, vp, table, lmax = _paged_setup()
+    hd = q.shape[-1]
+    pos = jnp.full((q.shape[0],), lmax // frac, jnp.int32)
+    one = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                    num_splits=1, use_kernel=False)
+    many = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                     num_splits=splits, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(many), np.asarray(one),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_paged_split_ragged_pos_and_empty_lane():
+    """Per-sequence fills, including a completely empty lane (pos=0): dead
+    splits on the short lanes contribute nothing; the empty lane yields the
+    defined all-zero output under every split count."""
+    q, kp, vp, table, lmax = _paged_setup(b=3, nb=4, page=8)
+    hd = q.shape[-1]
+    pos = jnp.asarray([lmax, 5, 0], jnp.int32)
+    outs = [decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                      num_splits=s, use_kernel=False)
+            for s in (1, 2, 4)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-6)
+    assert float(jnp.sum(jnp.abs(outs[0][2]))) == 0.0
+
+
+@pytest.mark.parametrize("splits", [2, 4])
+def test_paged_split_kernel_matches_ref(splits):
+    """The Pallas two-stage path (interpret mode) == the jnp split oracle ==
+    the single-pass kernel, at a partially filled ragged batch."""
+    q, kp, vp, table, lmax = _paged_setup(b=2, hkv=2, g=2, hd=32, page=8, nb=4)
+    hd = q.shape[-1]
+    pos = jnp.asarray([lmax, 9], jnp.int32)
+    ref = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                    num_splits=splits, use_kernel=False)
+    out = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                    num_splits=splits, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    one = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                    num_splits=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(one),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_single_pass_matches_contiguous_bits():
+    """num_splits=1 on gathered pages == the contiguous reference on the
+    materialized lanes, bit for bit (the identity the serving pool's
+    bit-exactness contract stands on)."""
+    q, kp, vp, table, lmax = _paged_setup()
+    b, hq, hd = q.shape
+    hkv = kp.shape[1]
+    pos = jnp.asarray([lmax, lmax // 2], jnp.int32)
+    paged = decode_attention_paged_op(q, kp, vp, table, pos, scale=hd ** -0.5,
+                                      num_splits=1, use_kernel=False)
+    k, v = materialize_pages(kp, vp, table)
+    ref = decode_attention_ref(q.reshape(b, hkv, hq // hkv, hd), k, v, pos,
+                               hd ** -0.5)
+    np.testing.assert_array_equal(np.asarray(paged),
+                                  np.asarray(ref.reshape(b, hq, hd)))
+
+
+def test_init_paged_cache_dual_layout():
+    """Pages carry the §III-C dual layout per block: K column-wise
+    (..., hd, Bsz), V row-wise (..., Bsz, hd)."""
+    pages = init_paged_cache(3, 5, 2, 16, 8, jnp.bfloat16)
+    assert pages["k_pages"].shape == (3, 5, 2, 16, 8)
+    assert pages["v_pages"].shape == (3, 5, 2, 8, 16)
+    assert pages["k_pages"].dtype == jnp.bfloat16
 
 
 # --------------------------------------------------------------------------

@@ -47,6 +47,116 @@ def test_cdpim_k_append_is_contiguous_column_write():
     np.testing.assert_array_equal(np.asarray(kc[..., 5]), np.ones((b, h, hd)))
 
 
+# ---------------------------------------------------------------- paged path
+
+
+def _paged_pool(r, b, h, hd, block, nb, dtype=jnp.float32):
+    """Per-layer page arrays + a scrambled one-page-per-block table (page 0
+    reserved, mirroring the serving pool's pinned dummy page)."""
+    n_pages = b * nb + 1
+    kp = jnp.zeros((n_pages, h, hd, block), dtype)
+    vp = jnp.zeros((n_pages, h, block, hd), dtype)
+    table = jnp.asarray(r.permutation(b * nb).reshape(b, nb) + 1, jnp.int32)
+    return kp, vp, table
+
+
+@pytest.mark.parametrize("t,pos", [
+    (1, [0, 3, 7]),          # single-token decode, incl. a block-boundary fill
+    (4, [2, 6, 0]),          # chunk append crossing a page boundary
+    (8, [0, 4, 8]),          # exactly two blocks / straddle / aligned tail
+])
+def test_append_layer_paged_matches_contiguous_bits(t, pos):
+    """In-place paged append == contiguous §III-C append, bit for bit, after
+    gathering the pages back through the block table — for the scalar decode
+    scatter (T=1) and the chunked take_along_axis path (T>1), including
+    writes that straddle block boundaries."""
+    r = np.random.default_rng(11)
+    b, h, hd, block, nb = len(pos), 2, 8, 4, 4
+    lmax = block * nb
+    k_new = jnp.asarray(r.standard_normal((b, h, t, hd)), jnp.float32)
+    v_new = jnp.asarray(r.standard_normal((b, h, t, hd)), jnp.float32)
+    posv = jnp.asarray(pos, jnp.int32)
+
+    cache = kv_mapping.init_cache(1, b, h, hd, lmax, jnp.float32, "cdpim")
+    kc, vc = kv_mapping.append_layer(cache["k"][0], cache["v"][0],
+                                     k_new, v_new, posv)
+
+    kp, vp, table = _paged_pool(r, b, h, hd, block, nb)
+    kp, vp = kv_mapping.append_layer_paged(kp, vp, k_new, v_new, posv,
+                                           table, block)
+    k_gather, v_gather = kv_mapping.materialize_lanes(kp, vp, table)
+    np.testing.assert_array_equal(np.asarray(k_gather), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(v_gather), np.asarray(vc))
+
+
+def test_append_layer_paged_touches_only_mapped_pages():
+    """A lane's write lands in ITS pages only: every page outside the lane's
+    live blocks keeps its prior bits (the isolation property refcounted
+    sharing depends on)."""
+    r = np.random.default_rng(12)
+    b, h, hd, block, nb = 2, 2, 8, 4, 4
+    kp = jnp.asarray(r.standard_normal((b * nb + 1, h, hd, block)), jnp.float32)
+    vp = jnp.asarray(r.standard_normal((b * nb + 1, h, block, hd)), jnp.float32)
+    table = jnp.asarray(r.permutation(b * nb).reshape(b, nb) + 1, jnp.int32)
+    posv = jnp.asarray([1, 5], jnp.int32)
+    k_new = jnp.ones((b, h, 1, hd))
+    kp2, vp2 = kv_mapping.append_layer_paged(kp, vp, k_new, k_new, posv,
+                                             table, block)
+    touched = {int(table[i, int(posv[i]) // block]) for i in range(b)}
+    for p in range(b * nb + 1):
+        if p in touched:
+            continue
+        np.testing.assert_array_equal(np.asarray(kp2[p]), np.asarray(kp[p]))
+        np.testing.assert_array_equal(np.asarray(vp2[p]), np.asarray(vp[p]))
+    # and inside a touched page only the one column/row moved
+    for i in range(b):
+        pg, off = int(table[i, int(posv[i]) // block]), int(posv[i]) % block
+        np.testing.assert_array_equal(np.asarray(kp2[pg, :, :, off]),
+                                      np.ones((h, hd)))
+        keep = [j for j in range(block) if j != off]
+        np.testing.assert_array_equal(np.asarray(kp2[pg][:, :, keep]),
+                                      np.asarray(kp[pg][:, :, keep]))
+
+
+def test_extract_store_gather_roundtrip():
+    """extract_block -> store_block -> gather_pages reproduces the source
+    lane span bit-exactly (the admission pagify path)."""
+    r = np.random.default_rng(13)
+    nl, h, hd, block, nb = 2, 2, 8, 4, 3
+    k_lane = jnp.asarray(r.standard_normal((nl, h, hd, block * nb)), jnp.float32)
+    v_lane = jnp.asarray(r.standard_normal((nl, h, block * nb, hd)), jnp.float32)
+    pages = kv_mapping.init_paged_cache(nl, nb + 1, h, hd, block, jnp.float32)
+    for i in range(nb):
+        kb, vb = kv_mapping.extract_block(k_lane, v_lane, i, block)
+        pages = kv_mapping.store_block(pages, i + 1, kb, vb)
+    k, v = kv_mapping.gather_pages(pages["k_pages"], pages["v_pages"],
+                                   list(range(1, nb + 1)))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(k_lane))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_lane))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 6))
+def test_append_layer_paged_property(seed, t):
+    """Property: for ANY ragged fills and chunk length, paged append equals
+    contiguous append bit for bit through the gather."""
+    r = np.random.default_rng(seed)
+    b, h, hd, block, nb = 3, 2, 4, 4, 4
+    lmax = block * nb
+    posv = jnp.asarray(r.integers(0, lmax - t + 1, b), jnp.int32)
+    k_new = jnp.asarray(r.standard_normal((b, h, t, hd)), jnp.float32)
+    v_new = jnp.asarray(r.standard_normal((b, h, t, hd)), jnp.float32)
+    cache = kv_mapping.init_cache(1, b, h, hd, lmax, jnp.float32, "cdpim")
+    kc, vc = kv_mapping.append_layer(cache["k"][0], cache["v"][0],
+                                     k_new, v_new, posv)
+    kp, vp, table = _paged_pool(r, b, h, hd, block, nb)
+    kp, vp = kv_mapping.append_layer_paged(kp, vp, k_new, v_new, posv,
+                                           table, block)
+    kg, vg = kv_mapping.materialize_lanes(kp, vp, table)
+    np.testing.assert_array_equal(np.asarray(kg), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(vg), np.asarray(vc))
+
+
 @settings(max_examples=20, deadline=None)
 @given(pos=st.lists(st.integers(0, 12), min_size=2, max_size=4),
        seed=st.integers(0, 2**31 - 1))

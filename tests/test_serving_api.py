@@ -5,8 +5,8 @@ Acceptance criteria of the API-redesign PR:
   decode weights at load — and the pre-quantized decode emits tokens
   IDENTICAL to the on-the-fly fallback across BLOCKED/HBCEM/LBIM;
 * a ``SamplingParams(temperature=0)`` request reproduces the greedy
-  continuous-batching outputs exactly (the old ``generate`` surface survives
-  as a deprecated shim over ``serve``);
+  continuous-batching outputs exactly (the old ``Engine.generate(prompts)``
+  shim is gone — ``serve`` is the only entry point);
 * per-request ``eos_id`` / budgets / streaming callbacks behave per request.
 """
 import jax
@@ -147,13 +147,10 @@ def test_temperature_zero_reproduces_greedy(served, setup):
         assert res.prompt_len == len(p)
 
 
-def test_generate_shim_warns_and_matches_serve(served, setup):
-    cfg, params = setup
-    _, results = served
-    eng = Engine(cfg, params, max_len=MAX_LEN, slots=2, mode=Mode.LBIM, chunk=4)
-    with pytest.deprecated_call():
-        out = eng.generate(PROMPTS, max_new=BUDGETS)
-    assert out == [r.tokens for r in results]
+def test_generate_shim_is_gone():
+    """The deprecated batch-synchronous shim was removed — a stray caller
+    gets an AttributeError, not silently-different behavior."""
+    assert not hasattr(Engine, "generate")
 
 
 def test_per_request_eos(setup, served):
