@@ -10,7 +10,7 @@ import inspect
 import sys
 
 from benchmarks import (ablation_kv, continuous_batching, fig4_timeline, fig5,
-                        fig6, fig7, kernel_bench, table_overhead)
+                        fig6, fig7, kernel_bench, spec_decode, table_overhead)
 
 SUITES = {
     "fig4": fig4_timeline.run,
@@ -21,6 +21,7 @@ SUITES = {
     "kernel": kernel_bench.run,
     "ablation_kv": ablation_kv.run,
     "continuous": continuous_batching.run,
+    "spec": spec_decode.run,
 }
 
 

@@ -233,6 +233,21 @@ def _gemv_shaped(cfg, x: jax.Array) -> bool:
             and x.shape[0] <= cfg.quant_decode_max_batch)
 
 
+def quantizes_at(cfg, batch: int, t: int) -> bool:
+    """Would :func:`linear` route a ``(batch, t, d)`` activation through the
+    W8A8 PIM-GEMV path under ``cfg``?
+
+    The shape gate made queryable: the CU datapath is single-token
+    (``t == 1``) and low-batch only — anything else is the float GEMM.
+    Speculative verify runs each score position through the same
+    single-token decode shape, so a quantized-decode target quantizes its
+    verify sub-steps exactly like plain decode and spec output stays
+    bit-identical to the non-spec quantized engine (pinned by the spec
+    suite)."""
+    return bool(cfg.quantized_decode and t == 1
+                and batch <= cfg.quant_decode_max_batch)
+
+
 def linear(w, x: jax.Array, cfg) -> jax.Array:
     """``x @ w`` with the W8A8 PIM-GEMV path at quantized-decode GEMV shapes.
 

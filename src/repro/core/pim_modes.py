@@ -47,29 +47,37 @@ class StepPlan:
     decode: bool            # run a decode step for active sequences
     prefill_chunk: int      # tokens of pending-request prefill in this step
     fused: bool             # both in ONE XLA program (LBIM overlap)
+    spec: bool = False      # the decode half is a draft/verify round
 
     @property
     def label(self) -> str:
         if self.decode and self.prefill_chunk:
-            return "MACT_LDB" if self.fused else "split"
+            base = "MACT_LDB" if self.fused else "split"
+            return base + "+VERIFY" if self.spec else base
         if self.decode:
-            return "PIM_MAC_FM"
+            return "SPEC_VERIFY" if self.spec else "PIM_MAC_FM"
         return "LOAD"
 
 
 def plan_step(mode: Mode, have_decodes: bool, have_prefills: bool,
-              chunk: int) -> StepPlan:
+              chunk: int, spec: bool = False) -> StepPlan:
     """Resolve one continuous-batching engine step for ``mode``.
 
     ``chunk`` is the number of pending-prefill tokens the step would consume
-    (the admission chunk size, or the full remaining prompt).
+    (the admission chunk size, or the full remaining prompt). ``spec`` marks
+    the decode half as a draft/verify round — HBCEM GEMV drafting on the
+    draft model followed by one batched k+1-token verify GEMV→GEMM on the
+    target; it rides wherever a decode rides, so a BLOCKED admission step
+    (decode suppressed) suppresses speculation with it.
     """
     if have_decodes and have_prefills:
         if mode is Mode.LBIM:
-            return StepPlan(decode=True, prefill_chunk=chunk, fused=True)
+            return StepPlan(decode=True, prefill_chunk=chunk, fused=True,
+                            spec=spec)
         if mode is Mode.HBCEM:
-            return StepPlan(decode=True, prefill_chunk=chunk, fused=False)
+            return StepPlan(decode=True, prefill_chunk=chunk, fused=False,
+                            spec=spec)
         return StepPlan(decode=False, prefill_chunk=chunk, fused=False)
     if have_decodes:
-        return StepPlan(decode=True, prefill_chunk=0, fused=False)
+        return StepPlan(decode=True, prefill_chunk=0, fused=False, spec=spec)
     return StepPlan(decode=False, prefill_chunk=chunk, fused=False)

@@ -27,6 +27,7 @@ from repro.models import model as M
 from repro.serve.api import GenerationRequest, SamplingParams
 from repro.serve.faults import FaultPlan
 from repro.serve.serving_model import ServingModel
+from repro.serve.spec import SpecConfig
 
 
 def main() -> None:
@@ -54,6 +55,13 @@ def main() -> None:
     ap.add_argument("--quantized-decode", action="store_true",
                     help="route decode projections through the pre-quantized "
                          "W8A8 PIM-GEMV path (quantized at load)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="speculative decoding: prepare this arch as the "
+                         "draft model (e.g. rwkv6-1.6b, or the target arch "
+                         "itself for a self-draft acceptance ceiling)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft depth per verify round (with --spec-draft); "
+                         "per-request spec_k can cap it further")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="share content-hashed prompt-prefix blocks across "
@@ -80,10 +88,18 @@ def main() -> None:
     if args.quantized_decode:
         cfg = cfg.replace(quantized_decode=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    sm = ServingModel.prepare(cfg, params, slots=args.slots,
-                              max_len=args.prompt_len + args.max_new + 8)
+    max_len = args.prompt_len + args.max_new + 8
+    sm = ServingModel.prepare(cfg, params, slots=args.slots, max_len=max_len)
     print(f"prepared {cfg.name}: backend={sm.backend} "
           f"prequantized={sm.prequantized}")
+    spec = None
+    if args.spec_draft is not None:
+        dcfg = get_config(args.spec_draft, smoke=args.smoke)
+        dsm = (sm if dcfg.name == cfg.name else ServingModel.prepare(
+            dcfg, M.init_params(jax.random.PRNGKey(1), dcfg),
+            slots=args.slots, max_len=max_len))
+        spec = SpecConfig(draft=dsm, k=args.spec_k)
+        print(f"speculative decoding: draft={dcfg.name} k={args.spec_k}")
 
     rng = np.random.default_rng(0)
     shared = list(map(int, rng.integers(1, cfg.vocab_size, args.shared_prefix)))
@@ -102,7 +118,7 @@ def main() -> None:
             ttft_deadline=args.ttft_deadline, deadline=args.deadline))
 
     eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache, spec=spec)
     if args.faults is not None:
         eng.fault_plan = FaultPlan.seeded(args.faults)
     t0 = time.perf_counter()
@@ -116,10 +132,24 @@ def main() -> None:
         print(f"prefix cache: {rep['prefix']['prefix_hits']} hits / "
               f"{rep['prefix']['prefix_lookups']} lookups, "
               f"{rep['reused_prefix_tokens']} prefill tokens skipped")
+    if spec is not None:
+        sp = rep["spec"]
+        print(f"spec: {sp['rounds']} rounds, accepted {sp['accepted']}/"
+              f"{sp['proposed']} drafts (rate {sp['acceptance_rate']:.2f}), "
+              f"{sp['draft_steps']} draft GEMV steps, "
+              f"{sp['verify_tokens']} verify tokens")
     for i, r in enumerate(results[:3]):
         print(f"  req{i} ({r.state.value}/{r.finish_reason}): {r.tokens}")
-    if args.faults is not None or eng.ladder.is_degraded():
-        print(f"health: {eng.health()}")
+    # post-run health + occupancy ALWAYS: a clean run prints its zeros,
+    # which is exactly the evidence that nothing leaked or degraded
+    h = eng.health()
+    occ = h["occupancy"]
+    print(f"health: degraded={h['degraded']} counters={h['counters']}")
+    print(f"occupancy: slots {occ['slots_used']}/{occ['slots_total']} "
+          f"pages {occ['pages_used']}/{occ['pages_total']} "
+          f"prefix_pins={occ['prefix_pins']}")
+    if args.faults is not None:
+        print(f"ladder: {h['ladder']} fault_plan: {h['fault_plan']}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ from repro.pimsim.latency import (  # noqa: F401
     gpu_prefill_time,
     hbcem_e2e,
     pim_decode_step_time,
+    verify_step_time,
 )
 from repro.pimsim.llm import LLAMA_1B, LLAMA_7B, LLAMA_13B, MODELS, LLMSpec  # noqa: F401
 from repro.pimsim.pim import (  # noqa: F401

@@ -77,6 +77,26 @@ def pim_decode_step_time(model: LLMSpec, context: int, dev: DeviceSpec, design: 
     return t_lin + t_kv + t_io + aux_time(dev, model, batch)
 
 
+def verify_step_time(model: LLMSpec, n_tokens: int, context: int,
+                     dev: DeviceSpec, batch: int = 1) -> float:
+    """One speculative VERIFY pass: the target scores ``n_tokens`` candidate
+    positions per sequence in a single batched forward on the processor.
+
+    This is GEMM-shaped work, not GEMV: the weights stream ONCE for all
+    ``n_tokens x batch`` positions (vs one full weight stream per token on
+    the PIM decode path) — the entire reason draft/verify pays on a
+    bandwidth-bound device. Roofline: compute is the decode MACs of each
+    scored position; memory is one weight read plus each sequence's KV sweep.
+    """
+    n = max(int(n_tokens), 1)
+    t_c = (2.0 * model.decode_macs(context) * n * batch
+           / (dev.flops * dev.gpu_compute_eff))
+    t_m = (model.decode_linear_bytes(GPU_WEIGHT_BYTES)
+           + model.decode_kv_bytes(context, GPU_KV_BYTES) * batch) / (
+        dev.ext_bw * dev.gpu_bw_eff)
+    return max(t_c, t_m) + aux_time(dev, model, batch)
+
+
 @dataclass
 class StageBreakdown:
     prefill_s: float

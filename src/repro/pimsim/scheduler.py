@@ -23,6 +23,7 @@ from repro.pimsim.latency import (
     StageBreakdown,
     gpu_prefill_time,
     pim_decode_step_time,
+    verify_step_time,
 )
 from repro.pimsim.llm import LLMSpec
 from repro.pimsim.pim import PIMDesign
@@ -99,10 +100,21 @@ class ReplayReport:
     degraded_steps: int = 0      # steps run below their base backend rung
     retried_attempts: int = 0    # extra (discarded) step attempts re-priced
     stall_s: float = 0.0         # retry re-execution + slow-step penalties
+    # --- speculative decoding -------------------------------------------
+    spec_rounds: int = 0         # draft/verify rounds priced
+    spec_proposed: int = 0       # draft tokens proposed
+    spec_accepted: int = 0       # draft tokens accepted
+    spec_saved_s: float = 0.0    # plain-decode counterfactual minus spec cost
+    #                              (SIGNED: negative when acceptance is poor)
 
     @property
     def serialized_s(self) -> float:
         return self.total_s + self.overlap_saved_s
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
 
     def to_json(self) -> dict:
         """JSON-safe export (BENCH_serving.json tracks these across PRs).
@@ -122,10 +134,16 @@ class ReplayReport:
             "degraded_steps": self.degraded_steps,
             "retried_attempts": self.retried_attempts,
             "stall_s": self.stall_s,
+            "spec_rounds": self.spec_rounds,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "spec_saved_s": self.spec_saved_s,
         }
 
 
-def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) -> ReplayReport:
+def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign,
+                  draft_model: LLMSpec | None = None) -> ReplayReport:
     """Price a serving engine's ``ScheduleEvent`` stream with the calibrated
     timing model (the bridge from ``serve.engine.schedule_report()`` to
     simulated seconds on-device).
@@ -151,32 +169,89 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
       steps (``e.slow_penalty``) stall the timeline by that many extra step
       times. Both accumulate into ``stall_s``; ``degraded_steps`` counts
       steps that ran below their base backend rung.
+    * speculative rounds (``e.plan.spec``) price the draft rollout as PIM
+      GEMV steps on ``draft_model`` (HBCEM batch-1; half-Pbank rate inside a
+      fused step) and the batched k+1-position verify pass as a processor
+      GEMM (``verify_step_time`` — weights stream ONCE for all positions).
+      Draft-lane (re)sync prefills ride the processor. ``spec_saved_s`` is
+      the SIGNED difference against the counterfactual of emitting the same
+      tokens as plain decode steps — negative when acceptance is poor, which
+      is the honest answer. ``draft_model=None`` self-drafts (prices the
+      rollout on the target).
     """
     total = decode_busy = prefill_busy = 0.0
     reused = 0
     saved = stall = 0.0
     degraded_steps = retried = 0
+    spec_rounds = spec_proposed = spec_accepted = 0
+    spec_saved = 0.0
+    draft = model if draft_model is None else draft_model
     for e in events:
         r = getattr(e, "reused_tokens", 0)
         if r:
             reused += r
             saved += gpu_prefill_time(model, r, dev)
-        d_full = d_half = 0.0
-        if e.plan.decode and e.decode_batch > 0:
-            ctx = max(e.decode_ctx, 1)
-            splits = max(getattr(e, "kv_splits", 1), 1)
-            d_full = pim_decode_step_time(model, ctx, dev, design,
-                                          batch=e.decode_batch, lbim=False,
-                                          kv_splits=splits)
-            if e.plan.fused:
-                d_half = pim_decode_step_time(model, ctx, dev, design,
-                                              batch=e.decode_batch, lbim=True,
-                                              kv_splits=splits)
         p = gpu_prefill_time(model, e.prefill_tokens, dev) if e.prefill_tokens else 0.0
-        if e.plan.fused and max(d_half, p) <= d_full + p:
-            step, d = max(d_half, p), d_half
+        is_spec = (e.plan.decode and e.decode_batch > 0
+                   and getattr(e.plan, "spec", False))
+        if is_spec:
+            ctx = max(e.decode_ctx, 1)
+            nv = max(getattr(e, "verify_tokens", 0), 1) // max(e.decode_batch, 1)
+            t_verify = verify_step_time(model, nv, ctx, dev,
+                                        batch=e.decode_batch)
+            dsteps = max(getattr(e, "spec_draft_steps", 0), 0)
+            t_dfull = dsteps * pim_decode_step_time(draft, ctx, dev, design,
+                                                    batch=1, lbim=False)
+            dpf = getattr(e, "draft_prefill_tokens", 0)
+            t_dpf = gpu_prefill_time(draft, dpf, dev) if dpf else 0.0
+            # drafting is PIM work; verify + admission prefill + draft sync
+            # are processor work. Fused (MACT_LDB) overlaps drafting with
+            # the processor chain at the half-Pbank rate; verify always
+            # FOLLOWS drafting (it scores the drafted candidates).
+            serial = t_dfull + t_dpf + p + t_verify
+            if e.plan.fused:
+                t_dhalf = dsteps * pim_decode_step_time(
+                    draft, ctx, dev, design, batch=1, lbim=True)
+                fused_cost = max(t_dhalf, t_dpf + p) + t_verify
+                if fused_cost <= serial:
+                    step, d = fused_cost, t_dhalf + t_verify
+                else:
+                    step, d = serial, t_dfull + t_verify
+            else:
+                step, d = serial, t_dfull + t_verify
+            p_eff = p + t_dpf
+            # counterfactual: the round's emitted tokens as plain decode
+            # steps (the admission chunk rides the first one, as it would)
+            m = max(getattr(e, "spec_max_emitted", 0), 1)
+            bd = pim_decode_step_time(model, ctx, dev, design,
+                                      batch=e.decode_batch, lbim=False)
+            if e.plan.fused:
+                bh = pim_decode_step_time(model, ctx, dev, design,
+                                          batch=e.decode_batch, lbim=True)
+                first = max(bh, p) if max(bh, p) <= bd + p else bd + p
+            else:
+                first = bd + p
+            spec_saved += first + (m - 1) * bd - step
+            spec_rounds += 1
+            spec_proposed += getattr(e, "spec_drafted", 0)
+            spec_accepted += getattr(e, "spec_accepted", 0)
         else:
-            step, d = d_full + p, d_full
+            d_full = d_half = 0.0
+            if e.plan.decode and e.decode_batch > 0:
+                ctx = max(e.decode_ctx, 1)
+                splits = max(getattr(e, "kv_splits", 1), 1)
+                d_full = pim_decode_step_time(model, ctx, dev, design,
+                                              batch=e.decode_batch, lbim=False,
+                                              kv_splits=splits)
+                if e.plan.fused:
+                    d_half = pim_decode_step_time(model, ctx, dev, design,
+                                                  batch=e.decode_batch,
+                                                  lbim=True, kv_splits=splits)
+            if e.plan.fused and max(d_half, p) <= d_full + p:
+                step, d = max(d_half, p), d_half
+            else:
+                step, d = d_full + p, d_full
+            p_eff = p
         attempts = max(getattr(e, "attempts", 1), 1)
         slow = max(getattr(e, "slow_penalty", 0), 0)
         waste = step * (attempts - 1) + step * slow
@@ -185,13 +260,15 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign) ->
         retried += attempts - 1
         degraded_steps += 1 if getattr(e, "degraded", False) else 0
         decode_busy += d * attempts
-        prefill_busy += p * attempts
+        prefill_busy += p_eff * attempts
     return ReplayReport(total_s=total, decode_busy_s=decode_busy,
                         prefill_busy_s=prefill_busy,
                         overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0),
                         reused_prefill_tokens=reused, prefix_saved_s=saved,
                         degraded_steps=degraded_steps, retried_attempts=retried,
-                        stall_s=stall)
+                        stall_s=stall, spec_rounds=spec_rounds,
+                        spec_proposed=spec_proposed,
+                        spec_accepted=spec_accepted, spec_saved_s=spec_saved)
 
 
 def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:

@@ -116,6 +116,11 @@ class GenerationRequest:
     priority: int = 0                     # higher preempts lower
     ttft_deadline: Optional[int] = None   # engine steps until first token
     deadline: Optional[int] = None        # engine steps until terminal
+    spec_k: Optional[int] = None          # per-request draft depth cap
+    # ``spec_k`` only caps the engine's speculative draft depth for THIS
+    # request (None defers to the engine-wide ``SpecConfig.k``; 0 opts the
+    # request out of speculation). It never changes emitted tokens — spec
+    # decode is an execution strategy, not a sampling policy.
 
     def validate(self, max_len: int) -> None:
         if not self.prompt or self.max_new_tokens < 1:
@@ -128,6 +133,8 @@ class GenerationRequest:
                          ("deadline", self.deadline)):
             if dl is not None and dl < 1:
                 raise ValueError(f"{name} must be >= 1 engine step, got {dl}")
+        if self.spec_k is not None and self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
         self.sampling.validate()
 
 
@@ -146,6 +153,11 @@ class GenerationResult:
     content-hashed prefix store (shared system prompts / few-shot headers)
     instead of being prefilled — admission-time work the schedule skipped.
     Reuse never changes the emitted tokens, only the schedule.
+
+    ``spec_proposed`` / ``spec_accepted`` count draft tokens proposed for /
+    accepted into this request by speculative decoding (both 0 when the
+    engine has no draft model). Like prefix reuse, speculation never changes
+    the emitted tokens — only how many engine steps they cost.
     """
 
     tokens: list[int] = field(default_factory=list)
@@ -155,6 +167,8 @@ class GenerationResult:
     state: RequestState = RequestState.QUEUED
     error: Optional[str] = None           # set for FAILED results
     preemptions: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def done(self) -> bool:

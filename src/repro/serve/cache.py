@@ -23,12 +23,24 @@ the cache a typed object instead:
   (``kv_mapping.append_layer_paged``), and the split-KV flash kernel
   consumes the same tables through scalar-prefetch index maps.
 * Pages are **refcounted**: an active lane's table row, the staging stream's
-  handle, and the prefix index each hold one reference per page, and a page
-  returns to the free list exactly when its count reaches zero — the chaos
-  suite audits this (:meth:`CachePool.check_invariants`) after every fault
-  plan. Shared prefix pages are full blocks strictly below every owner's
-  append point, so the natural flow never writes one; ``ensure_residency``
-  still carries a defensive copy-on-write for adversarial states.
+  handle, the prefix index, and any live :class:`LaneFork` each hold one
+  reference per page, and a page returns to the free list exactly when its
+  count reaches zero — the chaos suite audits this
+  (:meth:`CachePool.check_invariants`) after every fault plan. Shared prefix
+  pages are full blocks strictly below every owner's append point, so the
+  natural flow never writes one; ``ensure_residency`` still carries a
+  defensive copy-on-write for adversarial states.
+* **Fork/rollback** (speculative decoding's verify branch):
+  :meth:`CachePool.fork_lane` snapshots a slot as an O(1) refcounted copy of
+  its block-table row — pages copy only when a branch writes (the fork's
+  extra reference makes the write block shared, so ``ensure_residency``
+  copies-on-write). A verify step appends k+1 candidate tokens, then either
+  :meth:`CachePool.rollback_lane` truncates the lane to the accepted length
+  and :meth:`CachePool.drop_fork` releases the snapshot, or
+  :meth:`CachePool.restore_lane` reinstates the snapshot bit-identically
+  (fault path). Each fork's references are released exactly once — a
+  double ``drop``/``restore`` is an :class:`EngineStateError`, and live
+  forks are part of the refcount audit.
 * **Prefix reuse** is zero-copy now: at insert, full ``block_size``-token
   blocks of the prompt are *indexed in place* (content-hashed, refcount
   pinned — nothing is copied out); at admission, a matching prompt prefix
@@ -310,11 +322,16 @@ class PagedKVState:
 
     def __init__(self, spec: StateSpec, cfg: ModelConfig, n_slots: int,
                  max_len: int, block_size: int, *, store_pages: int,
-                 prefix_cache: bool, dtype):
+                 prefix_cache: bool, dtype, spec_slack: int = 0):
         self.spec = spec
         self.block_size = int(block_size)
-        # ceil: a ragged max_len just leaves the last block partially filled
-        self.n_blocks = -(-int(max_len) // self.block_size)
+        # ceil: a ragged max_len just leaves the last block partially filled.
+        # ``spec_slack`` buys each lane room for a speculative verify step's
+        # TRANSIENT k+1 appends beyond max_len (rolled back before the lane
+        # can be observed at that fill) — without it a verify near max_len
+        # would clip into the lane's last real block.
+        self.n_blocks = -(-(int(max_len) + max(int(spec_slack), 0))
+                          // self.block_size)
         self.n_slots = int(n_slots)
         self.prefix_cache = bool(prefix_cache)
         self.store_capacity = int(store_pages) if self.prefix_cache else 0
@@ -331,6 +348,9 @@ class PagedKVState:
         self.block_tables = np.full((self.n_slots, self.n_blocks), -1, np.int64)
         self._index: OrderedDict[bytes, int] = OrderedDict()
         self.staging: Optional[_StagingHandle] = None
+        # live fork rows (identity-keyed): each holds one ref per page and
+        # is part of the audit's expected-refcount reconstruction
+        self._forks: list[np.ndarray] = []
 
     def __len__(self) -> int:
         """Indexed prefix entries (``prefix_report``'s ``stored_blocks``)."""
@@ -426,25 +446,79 @@ class PagedKVState:
 
     # ------------------------------------------------------------- residency
 
-    def ensure_residency(self, slot: int, pos: int) -> None:
-        """Page-in ``slot``'s current write block before a decode step
-        appends there; copy-on-write when that block is somehow shared."""
-        wb = pos // self.block_size
-        if wb >= self.n_blocks:
-            return  # at max_len: the engine retires before appending
-        p = int(self.block_tables[slot, wb])
-        if p < 0:
-            self.block_tables[slot, wb] = self._alloc_page()
-        elif self.refcount[p] > 1:
-            q = self._alloc_page()
-            self.pages = {
-                "k_pages": self.pages["k_pages"].at[:, q].set(
-                    self.pages["k_pages"][:, p]),
-                "v_pages": self.pages["v_pages"].at[:, q].set(
-                    self.pages["v_pages"][:, p]),
-            }
-            self.block_tables[slot, wb] = q
-            self._unref(p)
+    def ensure_residency(self, slot: int, pos: int, n_tokens: int = 1) -> None:
+        """Page-in ``slot``'s write blocks for the next ``n_tokens`` appends
+        starting at ``pos``; copy-on-write any such block that is shared
+        (a forked lane's partial write block, or an adversarial state).
+        This is the "pages copy only if the branch writes" half of the fork
+        protocol — forking itself never copies a page."""
+        last = min(pos + max(int(n_tokens), 1),
+                   self.n_blocks * self.block_size) - 1
+        if last < pos:
+            return  # at capacity: the engine retires before appending
+        for wb in range(pos // self.block_size, last // self.block_size + 1):
+            p = int(self.block_tables[slot, wb])
+            if p < 0:
+                self.block_tables[slot, wb] = self._alloc_page()
+            elif self.refcount[p] > 1:
+                q = self._alloc_page()
+                self.pages = {
+                    "k_pages": self.pages["k_pages"].at[:, q].set(
+                        self.pages["k_pages"][:, p]),
+                    "v_pages": self.pages["v_pages"].at[:, q].set(
+                        self.pages["v_pages"][:, p]),
+                }
+                self.block_tables[slot, wb] = q
+                self._unref(p)
+
+    # -------------------------------------------------------- fork / rollback
+
+    def fork_row(self, slot: int) -> np.ndarray:
+        """Snapshot ``slot``'s table row: O(1) — one extra ref per page, no
+        page content copied. The row is registered live for the audit."""
+        row = self.block_tables[slot].copy()
+        for p in row:
+            if p >= 0:
+                self._ref(int(p))
+        self._forks.append(row)
+        return row
+
+    def _forget_fork(self, row: np.ndarray) -> None:
+        for i, r in enumerate(self._forks):
+            if r is row:
+                del self._forks[i]
+                return
+        raise EngineStateError(
+            "fork row is not registered (released twice?)")
+
+    def restore_row(self, slot: int, row: np.ndarray) -> None:
+        """Reinstate a fork: the lane's current row (including any pages the
+        branch wrote) is released and the snapshot's row — and its refs —
+        transfer back to the slot. Bit-identical: a shared write block was
+        copied-on-write by the branch, so the snapshot's pages were never
+        touched."""
+        self._forget_fork(row)
+        self._drop_row(slot)
+        self.block_tables[slot] = row
+
+    def drop_fork_row(self, row: np.ndarray) -> None:
+        """Release a fork's references (the accept path, after rollback)."""
+        self._forget_fork(row)
+        for p in row:
+            if p >= 0:
+                self._unref(int(p))
+
+    def rollback(self, slot: int, pos: int) -> None:
+        """Truncate ``slot`` to fill level ``pos``: release every block at or
+        beyond the first dead one. Exact for paged KV — attention masks
+        strictly by ``[0, pos)``, so the kept write block's garbage tail is
+        dead weight."""
+        first = -(-int(pos) // self.block_size)
+        for b in range(first, self.n_blocks):
+            p = int(self.block_tables[slot, b])
+            if p >= 0:
+                self._unref(p)
+                self.block_tables[slot, b] = -1
 
     def begin_staging(self, pages: list[int]) -> dict:
         """Open the admission stream: matched prefix pages enter its block
@@ -560,9 +634,11 @@ class PagedKVState:
                       "v_pages": new_cache["v_pages"]}
 
     def reset_lanes(self) -> None:
-        """Drop every lane row and any staging stream; the prefix index and
-        page CONTENT (the cross-drain asset) survive."""
+        """Drop every lane row, any staging stream, and any leaked fork; the
+        prefix index and page CONTENT (the cross-drain asset) survive."""
         self.release_staging()
+        for row in list(self._forks):
+            self.drop_fork_row(row)
         for slot in range(self.n_slots):
             self._drop_row(slot)
 
@@ -580,6 +656,10 @@ class PagedKVState:
                     expect[p] += 1
         if self.staging is not None:
             for p in self.staging.table:
+                if p >= 0:
+                    expect[p] += 1
+        for row in self._forks:
+            for p in row:
                 if p >= 0:
                     expect[p] += 1
         for p in self._index.values():
@@ -601,6 +681,19 @@ class PagedKVState:
 # ===========================================================================
 # the pool
 # ===========================================================================
+
+
+@dataclass
+class LaneFork:
+    """A point-in-time snapshot of one slot's paged lane: the table row (one
+    fork-held ref per page) plus the fill level. Spent exactly once — by
+    :meth:`CachePool.drop_fork` (accept) or :meth:`CachePool.restore_lane`
+    (fault); a second release raises :class:`EngineStateError`."""
+
+    slot: int
+    pos: int
+    row: np.ndarray
+    live: bool = True
 
 
 @dataclass
@@ -633,12 +726,14 @@ class CachePool:
     def __init__(self, cfg: ModelConfig, max_len: int, n_slots: int, *,
                  prefix_cache: bool = True, block_size: int = 8,
                  prefix_pages: Optional[int] = None,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None, spec_slack: int = 0):
         self.cfg = cfg
         self.max_len = max_len
         self.n_slots = n_slots
         self.block_size = block_size
         self.prefix_pages = prefix_pages
+        # extra per-lane physical blocks for speculative verify transients
+        self.spec_slack = max(int(spec_slack), 0)
         self.specs = derive_state_specs(cfg)
         self.policy = derive_policy(self.specs)
         # fully paged residency requires KV to be the whole cache state;
@@ -661,7 +756,7 @@ class CachePool:
             return PagedKVState(
                 spec, self.cfg, self.n_slots, self.max_len, self.block_size,
                 store_pages=store_pages, prefix_cache=self.prefix_cache,
-                dtype=M.kv_cache_dtype(self.cfg))
+                dtype=M.kv_cache_dtype(self.cfg), spec_slack=self.spec_slack)
         if spec.kind == "paged_kv":
             return ContiguousKVState(spec, leaves)
         cls = {"ring": RingKVState, "recurrent": RecurrentState,
@@ -761,20 +856,29 @@ class CachePool:
 
     def alloc(self, request: Any, rid: int, *, reused_tokens: int = 0,
               ctx: Optional[int] = None, emitted: int = 0,
-              priority: Optional[int] = None) -> int:
+              priority: Optional[int] = None,
+              slot: Optional[int] = None) -> int:
         """Claim the first free lane for ``request`` (a GenerationRequest).
 
         The keyword overrides exist for preemption resume: a requeued request
         re-enters with ``ctx`` covering prompt + already-emitted tokens and
         ``emitted`` at its absolute emitted-token count, so budget accounting
         and the per-request RNG lane (keys indexed by emitted position)
-        continue exactly where eviction cut them off.
+        continue exactly where eviction cut them off. ``slot`` claims that
+        SPECIFIC free lane (a speculative draft pool mirrors the target
+        pool's slot assignment, so first-free would be wrong).
         """
         free = self.free_slots()
-        if not free:
+        if slot is not None:
+            if self.slots[slot].state != FREE:
+                raise EngineStateError(
+                    f"CachePool.alloc: slot {slot} is not free")
+            si = slot
+        elif not free:
             raise PoolExhausted("CachePool.alloc: no free slot",
                                 self.occupancy())
-        si = free[0]
+        else:
+            si = free[0]
         self.slots[si] = SlotInfo(
             state=ACTIVE, req=rid,
             budget=request.max_new_tokens,
@@ -818,17 +922,18 @@ class CachePool:
         self._pos = self._pos.at[slot].set(0)
         self.slots[slot] = replace(self.slots[slot], state=FREE)
 
-    def views(self) -> dict:
+    def views(self, span: int = 1) -> dict:
         """The decode-step cache dict. Paged pools page-in every active
-        lane's current write block here (host-side residency, idempotent —
-        a retried step re-ensures the same pages)."""
+        lane's write blocks for the next ``span`` appends here (host-side
+        residency, idempotent — a retried step re-ensures the same pages).
+        A speculative verify step passes ``span = k + 1``."""
         kv = self._kv
         if kv is not None:
             pos = np.asarray(self._pos)
             try:
                 for i, s in enumerate(self.slots):
                     if s.state == ACTIVE:
-                        kv.ensure_residency(i, int(pos[i]))
+                        kv.ensure_residency(i, int(pos[i]), span)
             except _PagesExhausted as e:
                 raise PoolExhausted(str(e), self.occupancy()) from None
         out: dict = {}
@@ -847,6 +952,72 @@ class CachePool:
         for i in self.free_slots():
             free[i] = True
         self._pos = jnp.where(jnp.asarray(free), 0, new_cache["pos"])
+
+    # -------------------------------------------------------- fork / rollback
+
+    def fork_lane(self, slot: int) -> LaneFork:
+        """Snapshot an active lane before a speculative verify branch writes
+        into it: O(1) — the block-table row is copied and each page gains one
+        fork-held reference; no page content moves. The branch's first append
+        into the (now shared) partial write block copies-on-write in
+        :meth:`views`, so the snapshot's pages are never mutated."""
+        kv = self._kv
+        if kv is None:
+            raise EngineStateError("fork_lane requires a paged pool")
+        if self.slots[slot].state != ACTIVE:
+            raise EngineStateError(f"fork_lane of non-active slot {slot}")
+        return LaneFork(slot=slot, pos=int(np.asarray(self._pos)[slot]),
+                        row=kv.fork_row(slot))
+
+    def restore_lane(self, fork: LaneFork) -> None:
+        """Reinstate a fork bit-identically (the verify branch failed): the
+        branch's pages are released and the snapshot's row + fill level
+        transfer back to the slot. Spends the fork."""
+        kv = self._kv
+        if kv is None:
+            raise EngineStateError("restore_lane requires a paged pool")
+        if not fork.live:
+            raise EngineStateError("restore_lane on a spent fork")
+        kv.restore_row(fork.slot, fork.row)
+        self._pos = self._pos.at[fork.slot].set(fork.pos)
+        fork.live = False
+
+    def drop_fork(self, fork: LaneFork) -> None:
+        """Release a fork's page references (the accept path, after
+        :meth:`rollback_lane` truncated the lane). Spends the fork."""
+        kv = self._kv
+        if kv is None:
+            raise EngineStateError("drop_fork requires a paged pool")
+        if not fork.live:
+            raise EngineStateError("drop_fork on a spent fork")
+        kv.drop_fork_row(fork.row)
+        fork.live = False
+
+    def rollback_lane(self, slot: int, pos: int) -> None:
+        """Truncate an active lane to fill level ``pos``: blocks at or beyond
+        the first dead one are released (exactly once — the audit holds
+        mid-round because live forks are part of it). Exact for paged KV:
+        attention masks strictly by ``[0, pos)``."""
+        kv = self._kv
+        if kv is None:
+            raise EngineStateError("rollback_lane requires a paged pool")
+        kv.rollback(slot, pos)
+        self._pos = self._pos.at[slot].set(int(pos))
+
+    def extract_lane(self, slot: int) -> dict:
+        """A batch-1 COPY-VIEW of one contiguous lane (slices of the pool
+        arrays — functional updates downstream never touch the pool). The
+        draft side of speculative decoding rolls candidates out on this
+        without disturbing sibling lanes; paged pools fork instead."""
+        kv = self._kv
+        if kv is not None:
+            raise EngineStateError("extract_lane requires a contiguous pool")
+        out: dict = {}
+        for st in self.states:
+            for k, leaf in st.views().items():
+                out[k] = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+        out["pos"] = jnp.reshape(self._pos[slot], (1,))
+        return out
 
     # ----------------------------------------------------------- admission
 

@@ -68,10 +68,11 @@ from repro.serve import sampling
 from repro.serve.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_FAILED,
                              FINISH_LENGTH, FINISH_TIMEOUT, TERMINAL_STATES,
                              GenerationRequest, GenerationResult, RequestState)
-from repro.serve.cache import CachePool
+from repro.serve.cache import ACTIVE, CachePool
 from repro.serve.errors import EngineStateError, KernelFault, PoolExhausted
 from repro.serve.faults import FaultPlan
 from repro.serve.serving_model import ServingModel
+from repro.serve.spec import SpecConfig, SpecDecoder
 
 
 @dataclass
@@ -85,6 +86,13 @@ class ScheduleEvent:
     slow_penalty: int = 0   # injected slow-step clock penalty (engine steps)
     degraded: bool = False  # step ran below its base backend rungs
     kv_splits: int = 1      # paged decode KV-split fan-out (pimsim pricing)
+    # --- speculative decoding (plan.spec steps; all 0 otherwise) ----------
+    spec_drafted: int = 0         # draft tokens proposed this round
+    spec_accepted: int = 0        # draft tokens accepted this round
+    spec_draft_steps: int = 0     # draft-model GEMV steps (catch-up + chain)
+    verify_tokens: int = 0        # target positions scored: lanes x (K+1)
+    spec_max_emitted: int = 0     # most tokens any one lane emitted
+    draft_prefill_tokens: int = 0  # draft-lane (re)sync prefill tokens
 
 
 class ScheduleReport(dict):
@@ -159,6 +167,7 @@ class Engine:
     nan_guard: bool = True                  # finite-logits check per step
     max_step_attempts: int = 4              # ladder retries before step fails
     step_limit: Optional[int] = None        # watchdog; None -> sized from work
+    spec: Optional[SpecConfig] = None       # draft/verify speculative decoding
 
     def __post_init__(self) -> None:
         if self.serving is None:
@@ -168,12 +177,16 @@ class Engine:
         self.cfg = self.serving.cfg
         self.params = self.serving.params
         self.max_len = self.serving.max_len
+        if self.spec is not None:
+            self.spec.validate()
         if self.pool is None:
             # prefix blocks align with the admission chunk so a reuse run's
-            # chunk boundaries match a cold run's exactly
+            # chunk boundaries match a cold run's exactly; spec_slack buys
+            # each lane room for a verify round's transient k+1 appends
             self.pool = self.serving.cache_pool(
                 slots=self.slots, prefix_cache=self.prefix_cache,
-                block_size=self.chunk)
+                block_size=self.chunk,
+                spec_slack=self.spec.k if self.spec is not None else 0)
         elif self.pool.n_slots != self.slots:
             raise ValueError(
                 f"pool has {self.pool.n_slots} slots, engine expects {self.slots}")
@@ -183,6 +196,21 @@ class Engine:
                 f"pool block_size={self.pool.block_size} must equal engine "
                 f"chunk={self.chunk} when prefix caching is on")
         self.prefix_cache = self.pool.prefix_cache
+        self.spec_dec: Optional[SpecDecoder] = None
+        if self.spec is not None:
+            if not self.pool.paged:
+                raise ValueError(
+                    "speculative decoding requires a fully paged target pool "
+                    "(verify branches fork/rollback block-table rows); this "
+                    "pool is contiguous")
+            if self.pool.spec_slack < self.spec.k:
+                raise ValueError(
+                    f"pool spec_slack={self.pool.spec_slack} < spec.k="
+                    f"{self.spec.k}: a verify round near max_len would "
+                    f"overflow the lane's block grid")
+            self.spec_dec = SpecDecoder(
+                self.spec.draft, self.serving, slots=self.slots,
+                max_len=self.max_len, k=self.spec.k)
         # sticky across serve() calls: a kernel that faulted stays demoted,
         # and health counters accumulate for the engine's lifetime
         self.ladder = DegradationLadder(self.cfg)
@@ -250,6 +278,9 @@ class Engine:
             for f in faults.faults:  # a plan replays identically per serve
                 f.fired = False
         pool.reset()  # fresh lanes + slot table; the prefix store survives
+        spec_dec = self.spec_dec
+        if spec_dec is not None:
+            spec_dec.reset()
         queue: list[int] = list(range(n))
         cur_tok = np.zeros((self.slots,), np.int32)
         stream: Optional[_Prefill] = None
@@ -285,6 +316,8 @@ class Engine:
                 return
             results[s.req].state = RequestState.FINISHED
             pool.retire(si)
+            if spec_dec is not None:  # the draft mirror never outlives it
+                spec_dec.retire_lane(si)
 
         def preempt(si: int) -> None:
             """Evict lane ``si`` under pressure: retire (pages released),
@@ -292,6 +325,8 @@ class Engine:
             bit-identical by the per-request RNG-lane contract."""
             r = pool.get(si).req
             pool.retire(si)
+            if spec_dec is not None:
+                spec_dec.retire_lane(si)
             H["preemptions"] += 1
             results[r].preemptions += 1
             results[r].state = RequestState.QUEUED
@@ -351,6 +386,8 @@ class Engine:
             for si in pool.active_slots():
                 if pool.get(si).req == r:
                     pool.retire(si)
+                    if spec_dec is not None:
+                        spec_dec.retire_lane(si)
             results[r].state = state
             results[r].finish_reason = reason
             results[r].error = error
@@ -451,7 +488,23 @@ class Engine:
                                          stream.remaining // self.chunk)
                 else:
                     c = stream.remaining
-            plan = plan_step(self.mode, bool(active), stream is not None, c)
+            # -- speculative draft depth per lane: the engine-wide k, capped
+            # by the request's own spec_k and by its remaining budget (the
+            # verify round emits at most k+1 tokens; the last budgeted token
+            # needs no speculation). Computed BEFORE planning so a round
+            # where nothing drafts is a plain decode step, not a mislabeled
+            # (and mispriced) SPEC_VERIFY.
+            spec_ks: dict[int, int] = {}
+            if spec_dec is not None:
+                for si in active:
+                    s = pool.get(si)
+                    rk = reqs[s.req].spec_k
+                    k_eff = min(self.spec.k if rk is None else rk,
+                                self.spec.k, s.budget - s.emitted - 1)
+                    if k_eff > 0:
+                        spec_ks[si] = k_eff
+            plan = plan_step(self.mode, bool(active), stream is not None, c,
+                             spec=bool(spec_ks))
             if stream is not None and c > 0:
                 # page-in the stream's write blocks for this quantum
                 # (host-side residency; idempotent under ladder retries)
@@ -464,6 +517,16 @@ class Engine:
             dparams = self.serving.decode_params
             logits = pre_logits = new_cache = new_scache = None
             attempts, step_ok = 0, False
+            # -- each attempt forks every verify participant afresh: the
+            # branch's appends copy-on-write against the snapshot, and each
+            # fork is spent exactly once — restored (bit-identical row and
+            # refcounts) the moment an attempt dies, dropped after accept
+            drafts: dict[int, list[int]] = {}
+            forks: dict = {}
+            pos_before: dict[int, int] = {}
+            span = 1
+            if plan.spec:
+                spec_dec.begin_round()
             while attempts < self.max_step_attempts:
                 attempts += 1
                 cfg_step = ladder.apply(self.cfg)
@@ -475,6 +538,24 @@ class Engine:
                             H["injected_faults"] += 1
                             raise KernelFault(f.op, injected=True)
                     logits = pre_logits = new_cache = new_scache = None
+                    span = 1
+                    if plan.spec:
+                        # draft rollouts: functional w.r.t. the draft pool
+                        # (only finish_round commits), so a retried attempt
+                        # simply re-drafts; lane (re)sync is idempotent
+                        spec_dec.prune({si: pool.get(si).req
+                                        for si in active})
+                        dcfg = ladder.apply(spec_dec.draft_cfg)
+                        drafts = {}
+                        for si, k_eff in spec_ks.items():
+                            s = pool.get(si)
+                            spec_dec.ensure_lane(si, s.req, reqs[s.req],
+                                                 ext_prompt(s.req), dcfg)
+                            drafts[si] = spec_dec.rollout(si, k_eff, dcfg)
+                        span = 1 + max(len(d) for d in drafts.values())
+                        forks = {si: pool.fork_lane(si) for si in active}
+                        pos_before = {si: forks[si].pos for si in active}
+                    feed = jnp.asarray(cur_tok)[:, None]
                     if plan.fused:
                         self._require(stream is not None,
                                       "fused step planned without an "
@@ -483,14 +564,13 @@ class Engine:
                             stream.toks[:, stream.off:stream.off + c])
                         logits, new_cache, pre_logits, new_scache = \
                             interleave.fused_step(
-                                dparams, pool.views(),
-                                jnp.asarray(cur_tok)[:, None],
+                                dparams, pool.views(span=1), feed,
                                 stream.cache, chunk_toks, cfg_step)
                     else:
                         if plan.decode:
                             logits, new_cache = interleave.decode_only_step(
-                                dparams, pool.views(),
-                                jnp.asarray(cur_tok)[:, None], cfg_step)
+                                dparams, pool.views(span=1), feed,
+                                cfg_step)
                         if plan.prefill_chunk:
                             self._require(stream is not None,
                                           "prefill chunk planned without an "
@@ -501,6 +581,33 @@ class Engine:
                                 interleave.prefill_chunk_step(
                                     dparams, stream.cache, chunk_toks,
                                     cfg_step)
+                    if plan.spec and span > 1:
+                        # Verify scores every span position through the SAME
+                        # (slots, 1) decode program plain decode runs, each
+                        # committed into the forked rows before the next —
+                        # so both the verify logits AND the accepted tokens'
+                        # KV are bit-identical to the non-spec path. (A
+                        # T=K+1 batched forward rounds bf16 reductions
+                        # differently, which flips near-tie argmaxes and
+                        # poisons the cache ulp-by-ulp even at acceptance
+                        # 1.0.) On hardware the K+1 scores fuse into one
+                        # weights-resident GEMM; pimsim prices the event
+                        # that way (`latency.verify_step_time`).
+                        vlogits = [logits]
+                        pool.commit(new_cache)
+                        new_cache = None
+                        for j in range(1, span):
+                            feed_j = np.zeros((self.slots, 1), np.int32)
+                            for si, d in drafts.items():
+                                if j - 1 < len(d):
+                                    feed_j[si, 0] = d[j - 1]
+                            lg_j, nc_j = interleave.decode_only_step(
+                                dparams, pool.views(span=1),
+                                jnp.asarray(feed_j), cfg_step)
+                            pool.commit(nc_j)
+                            vlogits.append(lg_j)
+                        logits = jnp.concatenate(
+                            [jnp.asarray(lg) for lg in vlogits], axis=1)
                     if faults is not None:
                         f = faults.take(self._clock, "nan_logits",
                                         pred=lambda _: ladder.can_degrade())
@@ -522,6 +629,12 @@ class Engine:
                 except EngineStateError:
                     raise
                 except Exception as e:  # noqa: BLE001 — the ladder IS the handler
+                    # a dead attempt's forks are reinstated NOW — rows and
+                    # refcounts bit-identical to pre-round — so the ladder
+                    # retry (or the failure path below) starts clean
+                    for fk in forks.values():
+                        if fk.live:
+                            pool.restore_lane(fk)
                     H["retried_steps"] += 1
                     if isinstance(e, KernelFault):
                         ladder.record_fault(e.op)
@@ -539,23 +652,42 @@ class Engine:
                 if f is not None:
                     H["injected_faults"] += 1
                     slow = f.penalty
-            self._push_event(ScheduleEvent(
+            ev = ScheduleEvent(
                 plan, len(active), c if plan.prefill_chunk else 0,
                 max((pool.get(i).ctx for i in active), default=0),
                 self._take_reuse(), attempts=attempts, slow_penalty=slow,
                 degraded=ladder.is_degraded(),
+                # a spec step is priced as one weights-resident verify GEMM,
+                # not K+1 split-KV GEMV sweeps, so it doesn't fan out
                 kv_splits=(max(1, self.cfg.decode_kv_splits)
-                           if plan.decode and pool.paged else 1)))
+                           if plan.decode and pool.paged and not plan.spec
+                           else 1))
+            if plan.spec:
+                st = spec_dec.round_stats()
+                ev.spec_drafted = st["drafted"]
+                ev.spec_draft_steps = st["draft_steps"]
+                ev.draft_prefill_tokens = st["draft_prefill_tokens"]
+                ev.verify_tokens = len(active) * span
+            self._push_event(ev)
 
             if not step_ok:
                 # fail ONLY the step's participants; parked/queued requests
-                # and the engine itself keep serving
+                # and the engine itself keep serving. Verify forks are
+                # reinstated first — bit-identical rows — then retired with
+                # their lanes, so every page is released exactly once.
+                for fk in forks.values():
+                    if fk.live:
+                        pool.restore_lane(fk)
+                if spec_dec is not None:
+                    spec_dec.abort_round()
                 H["failures"] += 1
                 err = (f"step failed after {attempts} attempts "
                        f"(degradation ladder exhausted)")
                 for si in list(pool.active_slots()):
                     r = pool.get(si).req
                     pool.retire(si)
+                    if spec_dec is not None:
+                        spec_dec.retire_lane(si)
                     results[r].state = RequestState.FAILED
                     results[r].finish_reason = FINISH_FAILED
                     results[r].error = err
@@ -574,11 +706,18 @@ class Engine:
                 stream.cache = new_scache
                 stream.off += c
 
-            if plan.decode:
+            if plan.spec:
+                cur_tok = self._spec_accept(logits, active, drafts, forks,
+                                            pos_before, cur_tok, ev, emit)
+            elif plan.decode:
                 tok = self._sample_slots(logits, active)
                 cur_tok = tok.astype(np.int32)
                 for si in active:
                     emit(si, int(tok[si]))
+                    if spec_dec is not None:
+                        # keep draft lanes in sync across plain decode steps
+                        # (spec suppressed this round) without a resync
+                        spec_dec.note_emitted(si, [int(tok[si])])
 
             if stream is not None and stream.remaining == 0:
                 # chunks are unpadded, so the last chunk's final position IS
@@ -631,12 +770,19 @@ class Engine:
 
     # --------------------------------------------------------------- sampling
 
-    def _sample_slots(self, logits, active) -> np.ndarray:
+    def _sample_slots(self, logits, active,
+                      offsets: Optional[dict] = None) -> np.ndarray:
         """One pool-wide sampling step: per-slot params/keys from the table.
 
         When every active lane is greedy (the default), this is a single
         argmax (``greedy_masked`` — sample_masked's temperature=0 fast path):
         no RNG keys are derived and no top-k/top-p filter runs.
+
+        ``offsets`` overrides each lane's RNG-lane key index (slot -> absolute
+        emitted-token index); the default is the slot's current ``emitted``
+        count. A speculative verify round samples position ``j`` with offset
+        ``emitted + j`` — exactly the key non-spec decode would use when it
+        reached that token.
         """
         self._require(self.pool is not None, "sampling without a pool")
         pool = self.pool
@@ -659,13 +805,72 @@ class Engine:
                 sampled.append(si)
         # one batched fold_in for every sampled lane's token key (not one
         # eager dispatch per lane per step)
+        offs = [pool.get(si).emitted if offsets is None else offsets[si]
+                for si in sampled]
         keys[np.asarray(sampled)] = np.asarray(jax.vmap(jax.random.fold_in)(
             jnp.stack([self._base_keys[pool.get(si).req] for si in sampled]),
-            jnp.asarray([pool.get(si).emitted for si in sampled], jnp.uint32)))
+            jnp.asarray(offs, jnp.uint32)))
         return np.asarray(sampling.sample_masked(
             logits, jnp.asarray(done), keys=jnp.asarray(keys),
             temperature=jnp.asarray(temps), top_k=jnp.asarray(tks),
             top_p=jnp.asarray(tps)))
+
+    def _spec_accept(self, logits, active, drafts, forks, pos_before,
+                     cur_tok, ev: ScheduleEvent, emit) -> np.ndarray:
+        """Token-matching rejection acceptance for one verify round.
+
+        The target samples EVERY position ``j`` of the (slots, K+1, V) verify
+        logits on the request's own RNG lane at absolute index ``emitted + j``
+        — the key non-spec decode would use when it reached that token.
+        Draft token ``d_j`` is accepted iff it equals the target's sample at
+        the position that fed it. Verify positions run the plain decode
+        program on an identical context, so the emitted stream ``s_0..s_a``
+        (``s_a`` the corrected token, or the bonus token when the whole
+        draft held) is bit-identical to the non-spec engine at every
+        temperature, and acceptance is a pure function of the request seed.
+
+        Surviving lanes roll back to their pre-round fill plus what they
+        emitted (the lane's cache holds ``[cur, s_0..s_{a-1}]`` there — the
+        accepted tokens' KV was written by the verify pass itself); each
+        fork is spent exactly once.
+        """
+        pool = self.pool
+        spec_dec = self.spec_dec
+        results = self._results
+        span = logits.shape[1]
+        emitted_at = {si: pool.get(si).emitted for si in active}
+        samp = np.zeros((self.slots, span), np.int32)
+        for j in range(span):
+            samp[:, j] = self._sample_slots(
+                logits[:, j:j + 1, :], active,
+                offsets={si: emitted_at[si] + j for si in active})
+        new_cur = cur_tok.copy()
+        for si in active:
+            d = drafts.get(si, [])
+            a = 0
+            while a < len(d) and int(d[a]) == int(samp[si, a]):
+                a += 1
+            r = pool.get(si).req
+            emitted: list[int] = []
+            for j in range(a + 1):
+                emitted.append(int(samp[si, j]))
+                emit(si, int(samp[si, j]))
+                if pool.get(si).state != ACTIVE:
+                    break  # eos/budget: exactly where non-spec would stop
+            results[r].spec_proposed += len(d)
+            results[r].spec_accepted += a
+            ev.spec_accepted += a
+            ev.spec_max_emitted = max(ev.spec_max_emitted, len(emitted))
+            if pool.get(si).state == ACTIVE:
+                pool.rollback_lane(si, pos_before[si] + len(emitted))
+                new_cur[si] = emitted[-1]
+                spec_dec.finish_round(si, emitted)
+            else:
+                # retire already released the lane's pages; the fork below
+                # still holds its own refs — dropped once, like every round
+                spec_dec.retire_lane(si)
+            pool.drop_fork(forks[si])
+        return new_cur
 
     def _first_tokens(self, logits, rids: list[int],
                       offsets: Optional[list[int]] = None) -> list[int]:
@@ -805,8 +1010,26 @@ class Engine:
             "retried_step_attempts": sum(e.attempts - 1 for e in self.events),
             "degraded_steps": sum(1 for e in self.events if e.degraded),
             "slow_penalty_steps": sum(e.slow_penalty for e in self.events),
+            "spec": self._spec_report(),
             "health": self.health(),
         })
+
+    def _spec_report(self) -> dict:
+        """Aggregate speculative-decoding stats over the event stream."""
+        spec_events = [e for e in self.events if e.plan.spec]
+        proposed = sum(e.spec_drafted for e in spec_events)
+        accepted = sum(e.spec_accepted for e in spec_events)
+        return {
+            "enabled": self.spec_dec is not None,
+            "rounds": len(spec_events),
+            "proposed": proposed,
+            "accepted": accepted,
+            "acceptance_rate": (accepted / proposed) if proposed else 0.0,
+            "draft_steps": sum(e.spec_draft_steps for e in spec_events),
+            "draft_prefill_tokens": sum(e.draft_prefill_tokens
+                                        for e in spec_events),
+            "verify_tokens": sum(e.verify_tokens for e in spec_events),
+        }
 
 
 def wave_baseline_report(prompt_lens: Sequence[int], max_news: Sequence[int],

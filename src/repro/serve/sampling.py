@@ -57,6 +57,13 @@ def _filter_top_k_top_p(lg: jax.Array, top_k: jax.Array, top_p: jax.Array) -> ja
     ``top_k == 0`` disables the k cutoff; ``top_p == 1`` keeps every token
     with non-zero residual mass. The highest-probability token is always
     kept, so the filtered categorical is never empty.
+
+    Disabled cutoffs are EXACT no-ops, not near-misses: with ``top_p >= 1``
+    and ``top_k`` disabled (0) or >= vocab, the input logits pass through
+    untouched. The float-accumulated ``cumsum`` can reach 1.0 exactly at the
+    tail, so without the explicit bypass ``prev_mass < 1.0`` would drop the
+    last-ranked token — a silent distribution change rejection sampling
+    (which composes on this path) would inherit.
     """
     v = lg.shape[-1]
     order = jnp.argsort(-lg)                      # descending, stable
@@ -66,7 +73,8 @@ def _filter_top_k_top_p(lg: jax.Array, top_k: jax.Array, top_p: jax.Array) -> ja
     probs = jax.nn.softmax(slg)
     prev_mass = jnp.cumsum(probs) - probs         # mass strictly above each rank
     keep_sorted = (prev_mass < top_p) & (jnp.arange(v) < k_eff)
-    return jnp.where(keep_sorted[ranks], lg, NEG_FILL)
+    exact_noop = (top_p >= 1.0) & ((top_k <= 0) | (top_k >= v))
+    return jnp.where(exact_noop, lg, jnp.where(keep_sorted[ranks], lg, NEG_FILL))
 
 
 @functools.partial(jax.jit, static_argnames=("pad_id",))

@@ -52,13 +52,16 @@ class Scheduler:
                on_token: Optional[Callable[[int], None]] = None,
                priority: int = 0,
                ttft_deadline: Optional[int] = None,
-               deadline: Optional[int] = None) -> int:
-        """Queue one request; returns its request id."""
+               deadline: Optional[int] = None,
+               spec_k: Optional[int] = None) -> int:
+        """Queue one request; returns its request id. ``spec_k`` caps this
+        request's speculative draft depth (0 opts it out; None defers to the
+        engine's ``SpecConfig.k``)."""
         return self.submit_request(GenerationRequest(
             prompt=prompt, max_new_tokens=max_new, eos_id=eos_id,
             sampling=sampling if sampling is not None else SamplingParams(),
             on_token=on_token, priority=priority,
-            ttft_deadline=ttft_deadline, deadline=deadline))
+            ttft_deadline=ttft_deadline, deadline=deadline, spec_k=spec_k))
 
     def submit_request(self, request: GenerationRequest) -> int:
         if self.max_queue > 0 and len(self.queue) >= self.max_queue:

@@ -1,0 +1,279 @@
+"""Speculative decoding: draft/verify lanes on the copy-on-write paged pool.
+
+LP-Spec (PAPERS.md) observes that LPDDR-PIM is exactly where draft/verify
+pays off: *drafting* is the GEMV-bound low-batch workload the PIM CU banks
+accelerate (HBCEM), and *verifying* k tokens at once is the GEMM-shaped
+work the processor side already runs for prefill — so speculation generates
+the paper's LBIM mixed-workload story from within ONE request stream. This
+module is the serving-side half; ``pimsim.scheduler.replay_events`` prices
+the draft steps as PIM GEMV and the verify pass as a processor GEMM.
+
+**Protocol per engine step** (``Engine.serve`` drives this; the engine's
+step plan carries ``spec=True``):
+
+1. Each active lane's draft model rolls out up to ``k`` greedy candidate
+   tokens on its own cache lane in a separate, contiguous draft
+   :class:`~repro.serve.cache.CachePool` (slot ``i`` mirrors target slot
+   ``i``).
+2. The target scores all ``k+1`` positions of every lane in one verify
+   round over a **forked** block-table row
+   (:meth:`CachePool.fork_lane`): pages copy only if the branch writes
+   (copy-on-write in ``views``), and rejected suffixes release their pages
+   exactly once (:meth:`CachePool.rollback_lane` + ``drop_fork``, audited by
+   ``check_invariants`` — live forks are part of the refcount audit, so the
+   audit holds mid-round too). Functionally each position runs through the
+   SAME ``(slots, 1)`` decode program plain decode uses — a ``T=k+1``
+   batched forward rounds bf16 reductions differently, which flips
+   near-tie argmaxes and writes ulp-different KV. On hardware the ``k+1``
+   scores fuse into one weights-resident GEMM pass, and pimsim prices the
+   verify event exactly that way (``latency.verify_step_time``).
+3. Rejection sampling accepts a prefix of the draft plus one corrected
+   token — by **token matching**: at verify position ``j`` the target
+   samples ``s_j`` from its own logits with the EXACT key the non-spec
+   engine would use (``token_key(base, emitted + j)``), and draft token
+   ``d_j`` is accepted iff ``d_j == s_{j-1}``. The emitted stream is
+   ``s_0..s_a`` — the same keys, the same absolute emitted indices, and
+   (because verify positions run the plain decode program on an identical
+   context) bit-identical logits. Spec output is therefore bit-identical
+   to the non-spec engine at EVERY temperature — greedy argmax at 0, the
+   same sampled stream at >0 — and acceptance is a pure function of the
+   request seed. The draft model only ever changes how many engine steps
+   the stream costs, never its content.
+
+**Draft lane protocol** (anchor/catch-up — recurrent drafts like rwkv6
+cannot truncate state, so the draft side never needs rollback): a lane's
+draft cache holds the first ``fed`` tokens of the request's context;
+``pending`` is the suffix not yet fed (at least the current token). A
+rollout extracts the lane batch-1, feeds ``pending`` in one T-general
+catch-up step (its cache result is the ``anchor`` — all real tokens), then
+chains ``k-1`` single-token feeds for the remaining candidates. Only
+``finish_round`` writes the anchor back into the pool, so faulted/retried
+rounds never corrupt the draft lane, and ``fed + len(pending) ==
+len(context)`` is re-validated every round (a lane that missed an emission
+— e.g. across a preemption resume — is simply re-synced by prefill).
+
+Because verify sub-steps share plain decode's single-token shape, a
+quantized-decode target routes them through the SAME W8A8 GEMV path as
+non-spec decode (``dispatch.linear`` quantizes only single-token shapes —
+see :func:`repro.core.dispatch.quantizes_at`), so bit-identity holds for
+quantized targets too.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interleave
+from repro.models import model as M
+from repro.serve import sampling
+from repro.serve.cache import ACTIVE, CachePool
+from repro.serve.errors import EngineStateError
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative decoding config: a prepared draft
+    ``ServingModel`` (e.g. rwkv6_1b6 drafting for llama3_8b) + the maximum
+    draft depth ``k``. Per-request ``GenerationRequest.spec_k`` may cap ``k``
+    further (0 opts a request out)."""
+
+    draft: object            # ServingModel (typed loosely: import-cycle-free)
+    k: int = 4
+
+    def validate(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+
+
+@dataclass
+class _DraftLane:
+    """One slot's draft-side state: which request it mirrors, how many
+    context tokens its cache holds (``fed``), and the context suffix not yet
+    fed (``pending`` — always ends with the request's current token)."""
+
+    rid: int
+    fed: int
+    pending: list = field(default_factory=list)
+
+
+@dataclass
+class _RoundState:
+    """One lane's in-flight round: the post-catch-up cache (real tokens
+    only), its fill, the proposed candidates, the single-token GEMV feeds
+    spent, and the catch-up tokens ingested in one weights-resident pass."""
+
+    anchor: dict
+    anchor_fed: int
+    drafts: list
+    steps: int
+    catchup: int
+
+
+class SpecDecoder:
+    """Pairs a prepared draft ``ServingModel`` with the target behind the
+    existing ``Engine.serve`` contract. The engine owns scheduling, forking,
+    the verify pass and acceptance; this object owns the draft side: a
+    contiguous mirror pool (slot ``i`` ↔ target slot ``i``), lazy lane sync
+    by prefill, greedy rollouts, and the anchor/catch-up bookkeeping."""
+
+    def __init__(self, draft, target, *, slots: int, max_len: int, k: int):
+        if k < 1:
+            raise ValueError(f"draft depth k must be >= 1, got {k}")
+        if draft.cfg.vocab_size != target.cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab ({draft.cfg.vocab_size}) != target vocab "
+                f"({target.cfg.vocab_size}): draft tokens would be "
+                f"meaningless to the verifier")
+        self.draft = draft
+        self.k = int(k)
+        # rollouts transiently run k-1 tokens past the target's max context
+        self.max_len = int(max_len) + self.k + 1
+        self.pool = CachePool(draft.cfg, self.max_len, slots,
+                              prefix_cache=False, paged=False)
+        if not self.pool.policy.chunkable:
+            raise ValueError(
+                f"draft model {draft.cfg.name!r} has a ring cache: the "
+                f"catch-up feed is multi-token, which rings cannot ingest")
+        self._lanes: dict[int, _DraftLane] = {}
+        self._round: dict[int, _RoundState] = {}
+        self._prefill_tokens = 0
+
+    @property
+    def draft_cfg(self):
+        """The draft's pinned config — the engine runs it through its
+        degradation ladder (``ladder.apply``) so a demoted kernel rung
+        covers draft rollouts too."""
+        return self.draft.cfg
+
+    # ----------------------------------------------------------- lifecycle
+
+    def reset(self) -> None:
+        """Serve-start state: no lanes, no round, fresh draft pool."""
+        self._lanes.clear()
+        self._round.clear()
+        self._prefill_tokens = 0
+        self.pool.reset()
+
+    def begin_round(self) -> None:
+        """Open one draft/verify round (idempotent across ladder retries —
+        rollouts overwrite their round state rather than accumulate)."""
+        self._round.clear()
+        self._prefill_tokens = 0
+
+    def abort_round(self) -> None:
+        """The round's step failed permanently: discard in-flight anchors.
+        Lanes keep their last committed state — still consistent, since a
+        failed step emitted nothing."""
+        self._round.clear()
+
+    def prune(self, active_map: dict) -> None:
+        """Retire draft lanes whose slot no longer runs their request
+        (``active_map``: target slot -> request id)."""
+        for si in list(self._lanes):
+            if active_map.get(si) != self._lanes[si].rid:
+                self.retire_lane(si)
+
+    def retire_lane(self, si: int) -> None:
+        """Drop slot ``si``'s draft lane (target lane retired/preempted)."""
+        self._round.pop(si, None)
+        self._lanes.pop(si, None)
+        if self.pool.get(si).state == ACTIVE:
+            self.pool.retire(si)
+
+    def note_emitted(self, si: int, toks) -> None:
+        """Tokens emitted OUTSIDE a spec round (plain decode steps while
+        spec was suppressed) extend the lane's pending suffix, keeping the
+        catch-up invariant without a resync."""
+        lane = self._lanes.get(si)
+        if lane is not None:
+            lane.pending.extend(int(t) for t in toks)
+
+    # --------------------------------------------------------------- rounds
+
+    def ensure_lane(self, si: int, rid: int, request, context, cfg) -> int:
+        """Make slot ``si`` hold a valid draft lane for ``rid`` whose cache +
+        pending exactly cover ``context`` (the request's prompt + emitted
+        tokens). Valid lanes are free; stale/missing ones cost one draft
+        prefill of ``len(context) - 1`` tokens (returned, for pricing).
+        Idempotent — a ladder-retried round re-validates and skips."""
+        lane = self._lanes.get(si)
+        ctx = [int(t) for t in context]
+        if (lane is not None and lane.rid == rid
+                and lane.fed + len(lane.pending) == len(ctx)
+                and lane.pending == ctx[lane.fed:]):
+            return 0
+        if len(ctx) < 2:
+            raise EngineStateError(
+                f"spec lane sync with context of {len(ctx)} token(s): an "
+                f"active lane has emitted at least one token")
+        self.retire_lane(si)
+        toks = np.asarray([ctx[:-1]], np.int32)
+        _, pcache = M.prefill(self.draft.params, {"tokens": jnp.asarray(toks)},
+                              cfg, self.max_len)
+        pcache["pos"] = jnp.asarray([toks.shape[1]], jnp.int32)
+        self.pool.alloc(request, rid, slot=si, ctx=int(toks.shape[1]))
+        self.pool.insert(si, pcache)
+        self._lanes[si] = _DraftLane(rid=rid, fed=int(toks.shape[1]),
+                                     pending=[ctx[-1]])
+        self._prefill_tokens += int(toks.shape[1])
+        return int(toks.shape[1])
+
+    def rollout(self, si: int, k: int, cfg) -> list[int]:
+        """Roll out ``k`` greedy draft candidates for slot ``si``.
+
+        Functional w.r.t. the draft pool: the lane is extracted batch-1, the
+        pending suffix is fed in ONE T-general catch-up step (whose cache is
+        the round's anchor — real tokens only), and ``k-1`` single-token
+        feeds chain the remaining candidates on a throwaway cache. Nothing
+        lands in the pool until :meth:`finish_round`.
+        """
+        lane = self._lanes[si]
+        dparams = self.draft.decode_params
+        cache = self.pool.extract_lane(si)
+        logits, cache = interleave.decode_only_step(
+            dparams, cache, jnp.asarray([lane.pending], jnp.int32), cfg)
+        anchor, anchor_fed = cache, lane.fed + len(lane.pending)
+        drafts = [int(sampling.greedy(logits)[0])]
+        # pricing split: the catch-up is ONE multi-token pass (weights
+        # stream once — prefill-shaped), the chained candidates are the
+        # inherently sequential single-token GEMV feeds
+        steps = 0
+        for _ in range(int(k) - 1):
+            logits, cache = interleave.decode_only_step(
+                dparams, cache, jnp.asarray([[drafts[-1]]], jnp.int32), cfg)
+            drafts.append(int(sampling.greedy(logits)[0]))
+            steps += 1
+        self._round[si] = _RoundState(anchor, anchor_fed, drafts, steps,
+                                      catchup=len(lane.pending))
+        return list(drafts)
+
+    def finish_round(self, si: int, emitted) -> None:
+        """Commit slot ``si``'s round: the anchor (context up to and
+        including the round's input token) enters the draft pool, and the
+        round's emitted tokens become the new pending suffix. Lanes that
+        had no rollout this round (per-request ``spec_k`` floor) just extend
+        pending."""
+        rs = self._round.pop(si, None)
+        lane = self._lanes.get(si)
+        if rs is None:
+            self.note_emitted(si, emitted)
+            return
+        if lane is None:
+            raise EngineStateError(
+                f"finish_round({si}) with a rollout but no draft lane")
+        self.pool.insert(si, rs.anchor)
+        lane.fed = rs.anchor_fed
+        lane.pending = [int(t) for t in emitted]
+
+    def round_stats(self) -> dict:
+        """Per-round pricing inputs for the engine's ``ScheduleEvent``.
+        ``draft_prefill_tokens`` covers every multi-token (weights-resident)
+        draft pass this round: lane resync prefills AND catch-up feeds."""
+        return {
+            "draft_steps": sum(rs.steps for rs in self._round.values()),
+            "drafted": sum(len(rs.drafts) for rs in self._round.values()),
+            "draft_prefill_tokens": self._prefill_tokens + sum(
+                rs.catchup for rs in self._round.values()),
+        }

@@ -37,6 +37,8 @@ from repro.serve.errors import (AdmissionRejected, EngineStateError,
                                 KernelFault, PoolExhausted)
 from repro.serve.faults import KINDS, Fault, FaultPlan
 from repro.serve.scheduler import Scheduler
+from repro.serve.serving_model import ServingModel
+from repro.serve.spec import SpecConfig
 from serving_refs import BUDGETS, MAX_LEN, PROMPTS
 
 CHAOS_SEEDS = [0, 1, 2, 3, 4]
@@ -160,6 +162,81 @@ def test_chaos_faulted_run_priced_honestly(setup):
     assert sim.retried_attempts >= 1
     assert sim.degraded_steps >= 1
     assert sim.total_s > clean_sim.total_s
+
+
+# ===========================================================================
+# chaos sweep: speculative decoding mode
+# ===========================================================================
+
+
+@pytest.fixture(scope="module")
+def spec_sm(setup):
+    """Interpret-pinned serving artifact shared by spec chaos engines —
+    self-draft keeps acceptance high so rounds actually fork/rollback."""
+    cfg, params = setup
+    return ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+
+
+def _spec_engine(spec_sm, mode, k=2, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("chunk", 4)
+    return Engine(spec_sm.cfg, spec_sm.params, max_len=MAX_LEN, mode=mode,
+                  serving=spec_sm, spec=SpecConfig(draft=spec_sm, k=k), **kw)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", CHAOS_SEEDS[:3])
+def test_chaos_spec_mode(setup, spec_sm, baseline, seed, mode):
+    """The chaos contract survives draft/verify rounds: faults may land
+    mid-verify, so every retry first restores the forked rows — terminal
+    states, zero leaks in BOTH pools, FINISHED tokens bit-identical."""
+    plan = FaultPlan.seeded(seed, horizon=20, n_faults=4)
+    eng = _spec_engine(spec_sm, mode, fault_plan=plan)
+    res = eng.serve(_reqs())
+    assert all(r.state in TERMINAL_STATES for r in res)
+    _assert_no_leaks(eng)
+    assert eng.spec_dec.pool.check_invariants() == []
+    for r, ref in zip(res, baseline[mode]):
+        if r.state is RequestState.FINISHED:
+            assert r.tokens == ref
+        else:
+            assert r.tokens == ref[:len(r.tokens)]
+    assert eng.schedule_report()["health"]["counters"]["injected_faults"] \
+        == plan.fired()
+
+
+@pytest.mark.chaos
+def test_chaos_spec_same_seed_replays_bit_identically(spec_sm):
+    def run():
+        plan = FaultPlan.seeded(7, horizon=20, n_faults=4)
+        eng = _spec_engine(spec_sm, Mode.LBIM, fault_plan=plan)
+        res = eng.serve(_reqs())
+        return ([r.tokens for r in res], plan.fired(),
+                eng.schedule_report()["spec"])
+
+    assert run() == run()
+
+
+def test_kernel_fault_during_verify_releases_forks_once(setup, spec_sm,
+                                                        baseline):
+    """A kernel fault inside a verify round: the handler restores every live
+    fork (parent rows bit-identical, refcounts exactly once) before the
+    ladder retry — proven by the retried spec step completing with baseline
+    tokens and a clean refcount audit in both pools."""
+    plan = FaultPlan(faults=[Fault("kernel_exc", 3, op="decode_attention")])
+    eng = _spec_engine(spec_sm, Mode.HBCEM, fault_plan=plan)
+    with pytest.warns(RuntimeWarning, match="decode_attention"):
+        res = eng.serve(_reqs())
+    assert plan.fired() == 1
+    assert [r.state for r in res] == [RequestState.FINISHED] * len(res)
+    assert [r.tokens for r in res] == baseline[Mode.HBCEM]
+    # the faulted step WAS a spec step: it both retried and ran a rollout
+    assert any(ev.attempts > 1 and ev.spec_drafted > 0 for ev in eng.events)
+    assert eng.schedule_report()["retried_step_attempts"] >= 1
+    _assert_no_leaks(eng)
+    assert eng.spec_dec.pool.check_invariants() == []
+    assert eng.spec_dec.pool.occupancy().slots_used == 0
 
 
 # ===========================================================================

@@ -67,6 +67,48 @@ def test_top_k_one_and_tiny_top_p_collapse_to_argmax():
     assert (np.asarray(p0) == gd).all()
 
 
+def test_top_k_geq_vocab_is_exact_noop():
+    """``top_k >= vocab`` keeps every token — bit-identical to disabled (0),
+    including the filtered logits themselves (the explicit bypass, not a
+    near-miss through the sort/cumsum path)."""
+    lg = _logits(b=4, v=17, seed=9)
+    done = jnp.zeros((4,), bool)
+    base = np.asarray(sampling.sample_masked(
+        lg, done, **_params(4, [1.1] * 4, ks=[0] * 4)))
+    for k in (17, 18, 1000):
+        out = np.asarray(sampling.sample_masked(
+            lg, done, **_params(4, [1.1] * 4, ks=[k] * 4)))
+        assert (out == base).all(), f"top_k={k} changed the draw"
+    # k >= vocab composes with an ACTIVE top_p exactly like k disabled
+    row = lg[0, 0, :]
+    withp = sampling._filter_top_k_top_p(row, jnp.int32(17), jnp.float32(0.6))
+    nop = sampling._filter_top_k_top_p(row, jnp.int32(0), jnp.float32(0.6))
+    assert (np.asarray(withp) == np.asarray(nop)).all()
+
+
+def test_top_p_one_is_exact_noop():
+    """``top_p == 1.0`` passes logits through UNTOUCHED. The cumsum tail can
+    reach 1.0 exactly in f32, so without the explicit bypass the last-ranked
+    token would be silently dropped — a distribution change rejection
+    sampling (speculative verify) would inherit."""
+    lg = _logits(b=3, v=33, seed=4)
+    done = jnp.zeros((3,), bool)
+    base = np.asarray(sampling.sample_masked(
+        lg, done, **_params(3, [0.9] * 3, ps=[1.0] * 3)))
+    free = np.asarray(sampling.sample_masked(
+        lg, done, **_params(3, [0.9] * 3)))  # defaults: p=1, k=0
+    assert (base == free).all()
+    for row in np.asarray(lg[:, 0, :]):
+        filt = sampling._filter_top_k_top_p(
+            jnp.asarray(row), jnp.int32(0), jnp.float32(1.0))
+        # bitwise passthrough: every logit survives, none clamped to NEG_FILL
+        assert (np.asarray(filt) == row).all()
+    # and the combined disabled-cutoff case (p=1, k>=vocab) is also exact
+    row = lg[0, 0, :]
+    filt = sampling._filter_top_k_top_p(row, jnp.int32(33), jnp.float32(1.0))
+    assert (np.asarray(filt) == np.asarray(row)).all()
+
+
 def test_mixed_greedy_and_sampled_lanes_do_not_interact():
     """A greedy lane inside a sampled batch is bit-identical to greedy."""
     lg = _logits(b=3, v=29, seed=5)

@@ -1,0 +1,275 @@
+"""Speculative decoding suite: the determinism contract and the COW fork
+accounting.
+
+The load-bearing property is **bit-identity at every temperature**: a spec
+engine's token streams equal the non-spec engine's exactly — greedy, sampled,
+quantized, across BLOCKED/HBCEM/LBIM, with prefix reuse on or off, and
+through mid-decode preemption. The draft model only ever changes how many
+engine steps the stream costs, never its content. This holds because every
+verify position runs the SAME ``(slots, 1)`` decode program plain decode
+uses (a ``T=k+1`` batched forward rounds bf16 reductions differently, which
+flips near-tie argmaxes and writes ulp-different KV), and acceptance samples
+with the exact non-spec RNG lane keys (``token_key(base, emitted + j)``).
+
+The second pillar is fork hygiene: every verify round forks block-table
+rows copy-on-write, and rejected suffixes release their pages exactly once
+— ``CachePool.check_invariants`` audits the refcounts after every emission
+(mid-round, live forks included) and after serve.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import dispatch
+from repro.core.pim_modes import Mode
+from repro.models import model as M
+from repro.serve.api import GenerationRequest, RequestState, SamplingParams
+from repro.serve.engine import Engine
+from repro.serve.serving_model import ServingModel
+from repro.serve.spec import SpecConfig, SpecDecoder
+from serving_refs import BUDGETS, MAX_LEN, PROMPTS
+
+MODES = [Mode.BLOCKED, Mode.HBCEM, Mode.LBIM]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sm = ServingModel.prepare(cfg, params, max_len=MAX_LEN, slots=2)
+    return cfg, sm
+
+
+@pytest.fixture(scope="module")
+def draft(setup):
+    """Cross-family draft (recurrent rwkv6): acceptance ~0 between two
+    random-weight smoke models — which must not matter for token content."""
+    dcfg = get_config("rwkv6-1.6b", smoke=True)
+    return ServingModel.prepare(dcfg, M.init_params(jax.random.PRNGKey(1), dcfg),
+                                max_len=MAX_LEN, slots=2)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    yield
+    jax.clear_caches()
+
+
+def _reqs(prompts=PROMPTS, budgets=BUDGETS, **kw):
+    return [GenerationRequest(prompt=list(p), max_new_tokens=b, **kw)
+            for p, b in zip(prompts, budgets)]
+
+
+def _no_leaks(eng):
+    assert eng.pool.check_invariants() == []
+    assert eng.pool.occupancy().slots_used == 0
+    if eng.spec_dec is not None:
+        assert eng.spec_dec.pool.check_invariants() == []
+        # the draft mirror never outlives its target lane
+        assert eng.spec_dec.pool.occupancy().slots_used == 0
+
+
+# ===========================================================================
+# bit-identity: greedy x mode x prefix, sampled, quantized, preempted
+# ===========================================================================
+
+
+@pytest.mark.parametrize("prefix", [True, False])
+@pytest.mark.parametrize("mode", MODES)
+def test_spec_bit_identical_to_plain_greedy(setup, mode, prefix):
+    cfg, sm = setup
+    ref = sm.engine(mode=mode, chunk=4, prefix_cache=prefix).serve(_reqs())
+    eng = sm.engine(mode=mode, chunk=4, prefix_cache=prefix,
+                    spec=SpecConfig(draft=sm, k=3))
+    res = eng.serve(_reqs())
+    assert [r.tokens for r in res] == [r.tokens for r in ref]
+    assert all(r.state is RequestState.FINISHED for r in res)
+    rep = eng.schedule_report()["spec"]
+    assert rep["enabled"] and rep["rounds"] >= 1
+    assert rep["accepted"] > 0  # self-draft: speculation actually engaged
+    _no_leaks(eng)
+
+
+def test_spec_bit_identical_under_mid_decode_preemption(setup):
+    """A higher-priority arrival preempts a speculating lane mid-decode; the
+    victim's resume (lane resync by draft prefill) must stay bit-identical."""
+    cfg, sm = setup
+    prompts, budgets = PROMPTS[:3], [6, 6, 4]
+    solo = [sm.engine(slots=1, mode=Mode.HBCEM, chunk=4)
+            .serve(_reqs([p], [b]))[0].tokens
+            for p, b in zip(prompts, budgets)]
+    reqs = _reqs(prompts, budgets)
+    reqs[2] = dataclasses.replace(reqs[2], priority=5)
+    eng = sm.engine(slots=2, mode=Mode.HBCEM, chunk=4,
+                    spec=SpecConfig(draft=sm, k=2))
+    res = eng.serve(reqs)
+    assert sum(r.preemptions for r in res) >= 1
+    assert [r.tokens for r in res] == solo
+    _no_leaks(eng)
+
+
+def test_spec_bit_identical_sampled(setup):
+    """temp > 0: acceptance collapses (greedy drafts vs sampled targets) but
+    the emitted stream still rides the non-spec RNG lanes bit-identically."""
+    cfg, sm = setup
+    rng = np.random.default_rng(11)
+    samplers = [SamplingParams(temperature=0.8, seed=1),
+                SamplingParams(temperature=1.1, top_k=8, seed=2),
+                SamplingParams(),  # greedy rider in the sampled pool
+                SamplingParams(temperature=0.9, top_p=0.7, seed=3)]
+    def reqs():
+        r = np.random.default_rng(11)
+        return [GenerationRequest(
+            prompt=list(map(int, r.integers(1, cfg.vocab_size, 5))),
+            max_new_tokens=5, sampling=sp) for sp in samplers]
+    ref = sm.engine(mode=Mode.HBCEM, chunk=4).serve(reqs())
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4, spec=SpecConfig(draft=sm, k=3))
+    res = eng.serve(reqs())
+    assert [r.tokens for r in res] == [r.tokens for r in ref]
+    _no_leaks(eng)
+
+
+def test_spec_bit_identical_quantized_target(setup):
+    """Verify sub-steps share plain decode's single-token shape, so a
+    quantized-decode target routes them through the SAME W8A8 GEMV path —
+    bit-identity holds for quantized targets too."""
+    cfg, _ = setup
+    qcfg = cfg.replace(quantized_decode=True)
+    # the shape gate itself: single-token quantizes, multi-token never does
+    assert dispatch.quantizes_at(qcfg, 1, 1)
+    assert not dispatch.quantizes_at(qcfg, 1, 2)
+    qsm = ServingModel.prepare(qcfg, M.init_params(jax.random.PRNGKey(0), cfg),
+                               max_len=MAX_LEN, slots=2)
+    ref = qsm.engine(mode=Mode.HBCEM, chunk=4).serve(_reqs())
+    eng = qsm.engine(mode=Mode.HBCEM, chunk=4, spec=SpecConfig(draft=qsm, k=3))
+    res = eng.serve(_reqs())
+    assert [r.tokens for r in res] == [r.tokens for r in ref]
+    _no_leaks(eng)
+
+
+def test_cross_draft_changes_cost_not_content(setup, draft):
+    """A foreign (recurrent, near-zero-acceptance) draft yields the SAME
+    tokens — only the step count differs."""
+    cfg, sm = setup
+    ref = sm.engine(mode=Mode.HBCEM, chunk=4).serve(_reqs())
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4,
+                    spec=SpecConfig(draft=draft, k=3))
+    res = eng.serve(_reqs())
+    assert [r.tokens for r in res] == [r.tokens for r in ref]
+    rep = eng.schedule_report()["spec"]
+    assert rep["proposed"] > 0 and rep["draft_steps"] > 0
+    _no_leaks(eng)
+
+
+# ===========================================================================
+# acceptance: ceiling, determinism, per-request counters
+# ===========================================================================
+
+
+def test_self_draft_acceptance_ceiling(setup):
+    """Greedy self-draft proposals are the target's own argmaxes — near-total
+    acceptance (the only rejects are final-round budget truncations)."""
+    cfg, sm = setup
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4, spec=SpecConfig(draft=sm, k=3))
+    eng.serve(_reqs(PROMPTS[:3], [7, 7, 7]))
+    rep = eng.schedule_report()["spec"]
+    assert rep["accepted"] / rep["proposed"] > 0.9
+    _no_leaks(eng)
+
+
+def test_acceptance_replays_deterministically(setup, draft):
+    """Acceptance is a pure function of the request seed: same inputs =>
+    same tokens AND the same round/acceptance accounting."""
+    cfg, sm = setup
+
+    def run():
+        eng = sm.engine(mode=Mode.LBIM, chunk=4,
+                        spec=SpecConfig(draft=draft, k=2))
+        res = eng.serve(_reqs())
+        return [r.tokens for r in res], eng.schedule_report()["spec"]
+
+    assert run() == run()
+
+
+def test_result_counters_and_spec_k_opt_out(setup):
+    cfg, sm = setup
+    reqs = _reqs(PROMPTS[:3], [6, 6, 6])
+    reqs[1] = dataclasses.replace(reqs[1], spec_k=0)  # opted out
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4, spec=SpecConfig(draft=sm, k=3))
+    res = eng.serve(reqs)
+    assert res[1].spec_proposed == 0 and res[1].spec_accepted == 0
+    assert res[0].spec_proposed > 0 and res[2].spec_proposed > 0
+    for r in res:
+        assert 0 <= r.spec_accepted <= r.spec_proposed
+    rep = eng.schedule_report()["spec"]
+    assert sum(r.spec_proposed for r in res) == rep["proposed"]
+    assert sum(r.spec_accepted for r in res) == rep["accepted"]
+    # the opt-out request's tokens still match its solo run
+    solo = sm.engine(slots=1, mode=Mode.HBCEM, chunk=4).serve(
+        [_reqs(PROMPTS[1:2], [6])[0]])[0]
+    assert res[1].tokens == solo.tokens
+    _no_leaks(eng)
+
+
+def test_invariants_hold_at_every_emission(setup):
+    """The COW fork audit holds mid-round too: live forks participate in the
+    refcount check, so pages are accounted for at every token emission, not
+    just after serve() returns."""
+    cfg, sm = setup
+    eng = sm.engine(mode=Mode.HBCEM, chunk=4, spec=SpecConfig(draft=sm, k=3))
+    seen = []
+    reqs = [dataclasses.replace(
+                r, on_token=lambda t: seen.append(eng.pool.check_invariants()))
+            for r in _reqs()]
+    eng.serve(reqs)
+    assert len(seen) == sum(BUDGETS)
+    assert all(v == [] for v in seen)
+    _no_leaks(eng)
+
+
+# ===========================================================================
+# constructor gates
+# ===========================================================================
+
+
+def test_spec_config_rejects_bad_k(setup):
+    cfg, sm = setup
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        sm.engine(spec=SpecConfig(draft=sm, k=0))
+
+
+def test_spec_rejects_vocab_mismatch(setup):
+    cfg, sm = setup
+    alien = SimpleNamespace(cfg=cfg.replace(vocab_size=cfg.vocab_size // 2))
+    with pytest.raises(ValueError, match="vocab"):
+        SpecDecoder(alien, sm, slots=2, max_len=MAX_LEN, k=2)
+
+
+def test_spec_rejects_ring_cache_draft(setup):
+    """gemma2 W-slot rings can't chunk-ingest the multi-token catch-up feed."""
+    cfg, sm = setup
+    ring = SimpleNamespace(cfg=get_config("gemma2-27b", smoke=True).replace(
+        windowed_kv_cache=True, sliding_window=4))
+    with pytest.raises(ValueError, match="ring"):
+        SpecDecoder(ring, sm, slots=2, max_len=MAX_LEN, k=2)
+
+
+def test_spec_requires_fully_paged_target_pool(setup):
+    cfg, sm = setup
+    pool = sm.cache_pool(slots=2, prefix_cache=False, paged=False,
+                         spec_slack=4)
+    with pytest.raises(ValueError, match="fully paged"):
+        Engine(cfg, sm.params, max_len=MAX_LEN, slots=2, serving=sm,
+               prefix_cache=False, pool=pool, spec=SpecConfig(draft=sm, k=2))
+
+
+def test_spec_requires_slack_covering_k(setup):
+    cfg, sm = setup
+    pool = sm.cache_pool(slots=2, prefix_cache=False, spec_slack=1)
+    with pytest.raises(ValueError, match="spec_slack"):
+        Engine(cfg, sm.params, max_len=MAX_LEN, slots=2, serving=sm,
+               prefix_cache=False, pool=pool, spec=SpecConfig(draft=sm, k=4))
