@@ -10,7 +10,8 @@ import inspect
 import sys
 
 from benchmarks import (ablation_kv, continuous_batching, fig4_timeline, fig5,
-                        fig6, fig7, kernel_bench, spec_decode, table_overhead)
+                        fig6, fig7, kernel_bench, spec_decode, table_overhead,
+                        traffic)
 
 SUITES = {
     "fig4": fig4_timeline.run,
@@ -22,6 +23,7 @@ SUITES = {
     "ablation_kv": ablation_kv.run,
     "continuous": continuous_batching.run,
     "spec": spec_decode.run,
+    "traffic": traffic.run,
 }
 
 

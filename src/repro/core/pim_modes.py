@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
+from typing import Optional
 
 
 class Mode(enum.Enum):
@@ -56,7 +57,7 @@ class StepPlan:
             return base + "+VERIFY" if self.spec else base
         if self.decode:
             return "SPEC_VERIFY" if self.spec else "PIM_MAC_FM"
-        return "LOAD"
+        return "LOAD" if self.prefill_chunk else "IDLE"
 
 
 def plan_step(mode: Mode, have_decodes: bool, have_prefills: bool,
@@ -81,3 +82,121 @@ def plan_step(mode: Mode, have_decodes: bool, have_prefills: bool,
     if have_decodes:
         return StepPlan(decode=True, prefill_chunk=0, fused=False, spec=spec)
     return StepPlan(decode=False, prefill_chunk=chunk, fused=False)
+
+
+# --------------------------------------------------------------- step policy
+#
+# Under arrival-driven traffic the LBIM-vs-HBCEM decision is not a property
+# of the request *set* (the scheduler's queue-level heuristic) but of the
+# *step*: whether admission work is in flight right now, how deep the arrived
+# backlog is, and how much TTFT-deadline slack the tightest waiting request
+# still has. A ``StepPolicy`` makes that call every engine step from the
+# :class:`StepSignals` snapshot; the engine's static ``mode=`` pin is the
+# degenerate :class:`StaticPolicy`.
+
+
+@dataclass(frozen=True)
+class StepSignals:
+    """What the engine knows at a step boundary (all on the engine-step
+    clock — no wall time, so policy decisions replay bit-identically).
+
+    ``min_ttft_slack`` is the tightest ``arrival + ttft_deadline - clock``
+    over requests that have not yet emitted a first token (``None`` when no
+    waiting request declares a TTFT deadline). Negative slack means a
+    deadline is already blown (the sweep will time it out at this boundary).
+    """
+
+    clock: int                  # engine-step clock
+    active: int                 # lanes decoding this step
+    free: int                   # free lanes
+    queue_depth: int            # arrived, not yet being admitted
+    pending_arrivals: int       # submitted, arrival step still in the future
+    stream_remaining: int       # prefill tokens left on the in-flight stream
+    backlog_prefill_tokens: int  # prompt tokens waiting in the arrived queue
+    backlog_decode_tokens: int   # budget tokens waiting in the arrived queue
+    min_ttft_slack: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class StepChoice:
+    """One step's resolution: the Pbank mode, and whether speculative
+    draft/verify rounds may participate (speculation trades longer steps —
+    serial draft GEMVs plus the verify GEMM — for multi-token emission, so
+    an SLO-aware policy withholds it while TTFT-critical admission work is
+    on the processor)."""
+
+    mode: Mode
+    allow_spec: bool = True
+
+
+class StepPolicy:
+    """Per-step mode selection. Subclasses override :meth:`choose`; the
+    engine consults the policy once per planned step, before ``plan_step``.
+    """
+
+    name = "policy"
+
+    def choose(self, sig: StepSignals) -> StepChoice:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class StaticPolicy(StepPolicy):
+    """The legacy static pin, expressed as a policy."""
+
+    mode: Mode
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return self.mode.value
+
+    def choose(self, sig: StepSignals) -> StepChoice:
+        return StepChoice(self.mode)
+
+
+@dataclass(frozen=True)
+class SloAwarePolicy(StepPolicy):
+    """SLO-aware auto mode: fuse admission under queue pressure, speculate
+    only when it cannot hurt a waiting request's TTFT.
+
+    * **Mode** — LBIM whenever an admission stream is in flight or arrived
+      requests wait in the queue (overlap the processor's prefill with the
+      running decodes — the paper's MACT_LDB split); HBCEM (PIM_MAC_FM,
+      full-Pbank decode) when the pool is the only work. Decode-only steps
+      execute identically under both labels; the choice matters exactly on
+      the steps that carry a prefill chunk.
+    * **Speculation** — draft/verify rounds serialize draft GEMVs and a
+      verify GEMM into every step, stretching the very steps an admission
+      stream needs to reach a waiting request's first token. The policy
+      therefore gates speculation off while admission work exists — unless
+      the tightest waiting TTFT deadline still has more than
+      ``slack_margin`` steps of slack, in which case throughput wins.
+    """
+
+    name = "auto"
+    slack_margin: int = 0   # spec despite admission work iff slack > margin
+
+    def choose(self, sig: StepSignals) -> StepChoice:
+        admission_work = sig.stream_remaining > 0 or sig.queue_depth > 0
+        mode = Mode.LBIM if admission_work else Mode.HBCEM
+        if not admission_work:
+            return StepChoice(mode, allow_spec=True)
+        relaxed = (self.slack_margin > 0
+                   and sig.min_ttft_slack is not None
+                   and sig.min_ttft_slack > self.slack_margin)
+        return StepChoice(mode, allow_spec=relaxed)
+
+
+def resolve_policy(policy: "StepPolicy | Mode | str | None",
+                   default_mode: Mode = Mode.HBCEM) -> StepPolicy:
+    """Coerce a policy spec — a :class:`StepPolicy`, a :class:`Mode`, one of
+    the mode strings, ``"auto"``, or ``None`` — into a ``StepPolicy``."""
+    if policy is None:
+        return StaticPolicy(default_mode)
+    if isinstance(policy, StepPolicy):
+        return policy
+    if isinstance(policy, Mode):
+        return StaticPolicy(policy)
+    if policy == "auto":
+        return SloAwarePolicy()
+    return StaticPolicy(Mode(policy))

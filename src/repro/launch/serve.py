@@ -12,6 +12,15 @@ disables it for an A/B schedule comparison. ``--faults SEED`` injects a
 deterministic chaos plan (see ``repro.serve.faults``) and prints the
 engine's post-run health snapshot; ``--ttft-deadline`` / ``--deadline``
 bound each request in engine steps.
+
+Traffic plane: ``--arrival-rate R`` drives the requests through a seeded
+Poisson arrival process (mean R arrivals per engine step — requests become
+visible to admission only when the engine clock reaches their arrival step),
+``--trace FILE`` replays a saved ``serve.traffic`` trace instead, and
+``--mode-policy auto`` installs the per-step SLO-aware LBIM/HBCEM policy in
+place of the static ``--mode`` pin. Every run prints the latency summary —
+TTFT/TPOT/queue-wait percentiles on the engine-step clock plus SLO
+attainment when deadlines are declared.
 """
 from __future__ import annotations
 
@@ -22,8 +31,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.pim_modes import Mode
+from repro.core.pim_modes import Mode, SloAwarePolicy
 from repro.models import model as M
+from repro.serve import traffic
 from repro.serve.api import GenerationRequest, SamplingParams
 from repro.serve.faults import FaultPlan
 from repro.serve.serving_model import ServingModel
@@ -82,6 +92,18 @@ def main() -> None:
     ap.add_argument("--deadline", type=int, default=None,
                     help="per-request total deadline in engine steps "
                          "(missed -> emitted tokens kept, finish=timeout)")
+    ap.add_argument("--arrival-rate", type=float, default=None, metavar="R",
+                    help="Poisson arrival process at mean R requests per "
+                         "engine step (seeded by --seed; requests stay "
+                         "invisible to admission until their arrival step)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a saved serve.traffic trace file instead "
+                         "of generating requests (overrides --arrival-rate)")
+    ap.add_argument("--mode-policy", default=None,
+                    choices=["auto"] + [m.value for m in Mode],
+                    help="per-step mode policy: 'auto' = SLO-aware "
+                         "LBIM/HBCEM choice each step; a mode name pins it "
+                         "(equivalent to --mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -101,24 +123,49 @@ def main() -> None:
         spec = SpecConfig(draft=dsm, k=args.spec_k)
         print(f"speculative decoding: draft={dcfg.name} k={args.spec_k}")
 
-    rng = np.random.default_rng(0)
-    shared = list(map(int, rng.integers(1, cfg.vocab_size, args.shared_prefix)))
-    reqs = []
-    for i in range(args.requests):
-        prompt = shared + list(map(int, rng.integers(1, cfg.vocab_size,
-                                                     args.prompt_len)))
-        on_token = (lambda t, i=i: print(f"  [stream] req{i} -> {t}",
-                                         flush=True)) if args.stream else None
-        reqs.append(GenerationRequest(
-            prompt=prompt, max_new_tokens=args.max_new, eos_id=args.eos_id,
-            sampling=SamplingParams(temperature=args.temperature,
-                                    top_k=args.top_k, top_p=args.top_p,
-                                    seed=args.seed + i),
-            on_token=on_token,
-            ttft_deadline=args.ttft_deadline, deadline=args.deadline))
+    if args.trace is not None or args.arrival_rate is not None:
+        if args.trace is not None:
+            trace = traffic.TrafficTrace.load(args.trace)
+            print(f"traffic: replaying {len(trace.requests)} requests "
+                  f"from {args.trace}")
+        else:
+            trace = traffic.generate(traffic.TrafficConfig(
+                n_requests=args.requests, seed=args.seed,
+                rate=args.arrival_rate,
+                prompt_len=(args.prompt_len, args.prompt_len),
+                max_new=(args.max_new, args.max_new),
+                vocab=cfg.vocab_size,
+                ttft_deadline=args.ttft_deadline, deadline=args.deadline))
+            print(f"traffic: poisson rate={args.arrival_rate}/step "
+                  f"seed={args.seed} ({len(trace.requests)} requests)")
+        reqs = trace.to_requests()
+    else:
+        rng = np.random.default_rng(0)
+        shared = list(map(int, rng.integers(1, cfg.vocab_size,
+                                            args.shared_prefix)))
+        reqs = []
+        for i in range(args.requests):
+            prompt = shared + list(map(int, rng.integers(1, cfg.vocab_size,
+                                                         args.prompt_len)))
+            on_token = (lambda t, i=i: print(f"  [stream] req{i} -> {t}",
+                                             flush=True)) if args.stream else None
+            reqs.append(GenerationRequest(
+                prompt=prompt, max_new_tokens=args.max_new, eos_id=args.eos_id,
+                sampling=SamplingParams(temperature=args.temperature,
+                                        top_k=args.top_k, top_p=args.top_p,
+                                        seed=args.seed + i),
+                on_token=on_token,
+                ttft_deadline=args.ttft_deadline, deadline=args.deadline))
 
-    eng = sm.engine(mode=Mode(args.mode), chunk=args.chunk,
-                    prefix_cache=args.prefix_cache, spec=spec)
+    policy = None
+    mode = Mode(args.mode)
+    if args.mode_policy == "auto":
+        policy = SloAwarePolicy()
+    elif args.mode_policy is not None:
+        mode = Mode(args.mode_policy)
+    eng = sm.engine(mode=mode, chunk=args.chunk,
+                    prefix_cache=args.prefix_cache, spec=spec,
+                    step_policy=policy)
     if args.faults is not None:
         eng.fault_plan = FaultPlan.seeded(args.faults)
     t0 = time.perf_counter()
@@ -126,8 +173,24 @@ def main() -> None:
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
     rep = eng.schedule_report()
-    print(f"mode={args.mode} generated {toks} tokens in {dt:.2f}s "
+    mode_label = args.mode_policy or args.mode
+    print(f"mode={mode_label} generated {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s) schedule={rep.to_json()}")
+    # latency + SLO summary ALWAYS (engine-step clock): the serving numbers
+    # that matter under arrival-driven traffic
+    lat = rep["latency"]
+    ttft, tpot, qw = (lat["ttft_steps"], lat["tpot_steps"],
+                      lat["queue_wait_steps"])
+    print(f"latency (steps): "
+          f"ttft p50={ttft.get('p50')} p95={ttft.get('p95')} "
+          f"p99={ttft.get('p99')} | "
+          f"tpot p50={tpot.get('p50')} p95={tpot.get('p95')} | "
+          f"queue-wait p50={qw.get('p50')} p95={qw.get('p95')}")
+    slo = lat.get("slo")
+    if slo is not None:
+        print(f"SLO attainment: {slo['met']}/{lat['requests']} "
+              f"({slo['attainment']:.2%}; {slo['declared']} requests "
+              f"declared deadlines) mode_steps={rep['mode_steps']}")
     if eng.prefix_cache:
         print(f"prefix cache: {rep['prefix']['prefix_hits']} hits / "
               f"{rep['prefix']['prefix_lookups']} lookups, "

@@ -25,6 +25,7 @@ from repro.pimsim.scheduler import (  # noqa: F401
     ReplayReport,
     Trace,
     blocked_trace,
+    clock_to_time,
     lbim_e2e,
     replay_events,
 )

@@ -106,6 +106,12 @@ class ReplayReport:
     spec_accepted: int = 0       # draft tokens accepted
     spec_saved_s: float = 0.0    # plain-decode counterfactual minus spec cost
     #                              (SIGNED: negative when acceptance is poor)
+    idle_steps: int = 0          # engine-clock steps skipped waiting on arrivals
+    # per-event (clock_after, t_after) pairs on the simulated timeline —
+    # the bridge from engine-step latency marks (arrival / first-token /
+    # finish clocks) to simulated seconds; see ``clock_to_time``. Not part
+    # of ``to_json()``.
+    timeline: list = field(default_factory=list, repr=False)
 
     @property
     def serialized_s(self) -> float:
@@ -139,7 +145,35 @@ class ReplayReport:
             "spec_accepted": self.spec_accepted,
             "acceptance_rate": self.acceptance_rate,
             "spec_saved_s": self.spec_saved_s,
+            "idle_steps": self.idle_steps,
         }
+
+
+def clock_to_time(timeline, clock: int) -> float:
+    """Simulated seconds at which the engine-step clock REACHED ``clock``.
+
+    ``timeline`` is ``ReplayReport.timeline`` — monotone ``(clock_after,
+    t_after)`` pairs, one per replayed event. Returns the end time of the
+    first event whose post-event clock is >= ``clock`` (the earliest
+    simulated instant the engine's clock stands at or past ``clock``);
+    clock 0 is time 0, and clocks beyond the last event clamp to the end of
+    the timeline. Engine latency marks are recorded as post-event clocks,
+    so token marks map exactly; an arrival landing inside a multi-step
+    event (slow-step stall) maps to that event's end — the first boundary
+    at which the engine could have seen it.
+    """
+    if clock <= 0:
+        return 0.0
+    lo, hi = 0, len(timeline)
+    while lo < hi:  # first index with timeline[i].clock_after >= clock
+        mid = (lo + hi) // 2
+        if timeline[mid][0] < clock:
+            lo = mid + 1
+        else:
+            hi = mid
+    if lo == len(timeline):
+        return timeline[-1][1] if timeline else 0.0
+    return timeline[lo][1]
 
 
 def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign,
@@ -185,6 +219,9 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign,
     degraded_steps = retried = 0
     spec_rounds = spec_proposed = spec_accepted = 0
     spec_saved = 0.0
+    idle_total = 0
+    clock = 0
+    timeline: list = []
     draft = model if draft_model is None else draft_model
     for e in events:
         r = getattr(e, "reused_tokens", 0)
@@ -261,6 +298,14 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign,
         degraded_steps += 1 if getattr(e, "degraded", False) else 0
         decode_busy += d * attempts
         prefill_busy += p_eff * attempts
+        # engine-clock bookkeeping mirrors Engine._push_event exactly: an
+        # idle event advances the clock by its arrival gap at zero simulated
+        # cost (the device sits dark between arrivals — total_s stays busy
+        # time), any other event by 1 + its slow penalty.
+        idle = max(getattr(e, "idle_steps", 0), 0)
+        clock += idle if idle else 1 + slow
+        idle_total += idle
+        timeline.append((clock, total))
     return ReplayReport(total_s=total, decode_busy_s=decode_busy,
                         prefill_busy_s=prefill_busy,
                         overlap_saved_s=max(decode_busy + prefill_busy - total, 0.0),
@@ -268,7 +313,8 @@ def replay_events(events, model: LLMSpec, dev: DeviceSpec, design: PIMDesign,
                         degraded_steps=degraded_steps, retried_attempts=retried,
                         stall_s=stall, spec_rounds=spec_rounds,
                         spec_proposed=spec_proposed,
-                        spec_accepted=spec_accepted, spec_saved_s=spec_saved)
+                        spec_accepted=spec_accepted, spec_saved_s=spec_saved,
+                        idle_steps=idle_total, timeline=timeline)
 
 
 def blocked_trace(model, lin, lout, dev, design, batch=1) -> Trace:

@@ -117,6 +117,13 @@ class GenerationRequest:
     ttft_deadline: Optional[int] = None   # engine steps until first token
     deadline: Optional[int] = None        # engine steps until terminal
     spec_k: Optional[int] = None          # per-request draft depth cap
+    arrival_step: int = 0                 # engine step the request arrives
+    # ``arrival_step`` puts the request on the ARRIVAL-TIME plane: it stays
+    # invisible to admission (and to the queue-depth signals a step policy
+    # reads) until the engine-step clock reaches it, and both deadlines are
+    # measured from it — ``ttft_deadline``/``deadline`` bound steps *since
+    # arrival*, not since ``serve()`` started. The default 0 is the legacy
+    # everything-arrives-up-front behaviour.
     # ``spec_k`` only caps the engine's speculative draft depth for THIS
     # request (None defers to the engine-wide ``SpecConfig.k``; 0 opts the
     # request out of speculation). It never changes emitted tokens — spec
@@ -133,6 +140,9 @@ class GenerationRequest:
                          ("deadline", self.deadline)):
             if dl is not None and dl < 1:
                 raise ValueError(f"{name} must be >= 1 engine step, got {dl}")
+        if self.arrival_step < 0:
+            raise ValueError(
+                f"arrival_step must be >= 0, got {self.arrival_step}")
         if self.spec_k is not None and self.spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
         self.sampling.validate()
@@ -158,6 +168,16 @@ class GenerationResult:
     accepted into this request by speculative decoding (both 0 when the
     engine has no draft model). Like prefix reuse, speculation never changes
     the emitted tokens — only how many engine steps they cost.
+
+    **Latency marks** (engine-step clock; the raw material for the TTFT/TPOT
+    percentile telemetry in ``schedule_report()`` and the pimsim-priced
+    ``serve.traffic`` reports): ``arrival_step`` is when the request became
+    visible to admission, ``admit_step`` when admission work FIRST started
+    for it (set once — a preempted-then-requeued request keeps its original
+    mark, so queue-wait is never double-counted), ``first_token_step`` when
+    its first token emitted, ``finish_step`` when it reached a terminal
+    state. TTFT is ``first_token_step - arrival_step``; TPOT is
+    ``(finish_step - first_token_step) / (len(tokens) - 1)``.
     """
 
     tokens: list[int] = field(default_factory=list)
@@ -169,7 +189,36 @@ class GenerationResult:
     preemptions: int = 0
     spec_proposed: int = 0
     spec_accepted: int = 0
+    arrival_step: int = 0                 # when admission could first see it
+    admit_step: Optional[int] = None      # first admission work (set once)
+    first_token_step: Optional[int] = None  # first emitted token
+    finish_step: Optional[int] = None     # terminal-state transition
 
     @property
     def done(self) -> bool:
         return self.state in TERMINAL_STATES
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        """First-token latency in engine steps from arrival (None: no token
+        ever emitted)."""
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.arrival_step
+
+    @property
+    def tpot_steps(self) -> Optional[float]:
+        """Mean inter-token latency in engine steps (None: fewer than two
+        tokens, or the request never reached a terminal state)."""
+        if (self.first_token_step is None or self.finish_step is None
+                or len(self.tokens) < 2):
+            return None
+        return (self.finish_step - self.first_token_step) / (len(self.tokens) - 1)
+
+    @property
+    def queue_wait_steps(self) -> Optional[int]:
+        """Steps from arrival to the FIRST admission attempt (None: never
+        admitted). Preemption re-queues never re-accumulate here."""
+        if self.admit_step is None:
+            return None
+        return self.admit_step - self.arrival_step

@@ -62,7 +62,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import interleave
 from repro.core.dispatch import DegradationLadder
-from repro.core.pim_modes import Mode, StepPlan, plan_step
+from repro.core.pim_modes import (Mode, StepChoice, StepPlan, StepPolicy,
+                                  StepSignals, plan_step)
 from repro.models import model as M
 from repro.serve import sampling
 from repro.serve.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_FAILED,
@@ -86,6 +87,15 @@ class ScheduleEvent:
     slow_penalty: int = 0   # injected slow-step clock penalty (engine steps)
     degraded: bool = False  # step ran below its base backend rungs
     kv_splits: int = 1      # paged decode KV-split fan-out (pimsim pricing)
+    # --- traffic plane (arrival-driven serving telemetry) -----------------
+    mode: str = ""          # governing Mode this step (step-policy choice)
+    arrivals: int = 0       # requests that became visible at this boundary
+    queue_depth: int = 0    # arrived-but-unadmitted requests after arrivals
+    emitted_tokens: int = 0  # tokens emitted at this event's boundary
+    first_tokens: int = 0    # requests whose FIRST token emitted here
+    idle_steps: int = 0      # pure-idle clock jump to the next arrival
+    #                          (idle events advance the clock by this gap
+    #                           instead of 1 + slow_penalty)
     # --- speculative decoding (plan.spec steps; all 0 otherwise) ----------
     spec_drafted: int = 0         # draft tokens proposed this round
     spec_accepted: int = 0        # draft tokens accepted this round
@@ -168,6 +178,12 @@ class Engine:
     max_step_attempts: int = 4              # ladder retries before step fails
     step_limit: Optional[int] = None        # watchdog; None -> sized from work
     spec: Optional[SpecConfig] = None       # draft/verify speculative decoding
+    # --- traffic plane ----------------------------------------------------
+    step_policy: Optional[StepPolicy] = None  # per-step mode choice; None ->
+    #                                           the static `mode` pin governs
+    spec_refill: bool = True  # scale admission quantum with emitted tokens
+    #                           (speculating lanes drain budgets (k+1)x
+    #                            faster than retirements alone suggest)
 
     def __post_init__(self) -> None:
         if self.serving is None:
@@ -218,6 +234,11 @@ class Engine:
                         "failures": 0, "retried_steps": 0, "injected_faults": 0}
         self._in_serve = False
         self._cancel: set = set()
+        self.last_results: Optional[list[GenerationResult]] = None
+        self.last_requests: Optional[list[GenerationRequest]] = None
+        self._last_ev: Optional[ScheduleEvent] = None
+        self._arrived_unstamped = 0
+        self._queue_depth = 0
 
     def _require(self, cond: bool, msg: str) -> None:
         """Engine state-machine invariant (EngineStateError, not assert —
@@ -226,8 +247,19 @@ class Engine:
             raise EngineStateError(msg)
 
     def _push_event(self, ev: ScheduleEvent) -> None:
+        if not ev.mode:
+            ev.mode = self.mode.value
+        ev.arrivals = self._take_arrivals()
+        ev.queue_depth = self._queue_depth
         self.events.append(ev)
-        self._clock += 1 + ev.slow_penalty
+        # an idle event jumps the clock straight to the next arrival; every
+        # other event is one engine step plus any injected slow penalty
+        self._clock += ev.idle_steps if ev.idle_steps else 1 + ev.slow_penalty
+        self._last_ev = ev
+
+    def _take_arrivals(self) -> int:
+        n, self._arrived_unstamped = self._arrived_unstamped, 0
+        return n
 
     # ------------------------------------------------------------------ API
 
@@ -266,7 +298,9 @@ class Engine:
                      for r in reqs]
         self._base_keys = [sampling.request_key(r.sampling.seed, r.prompt)
                            for r in reqs]
-        results = [GenerationResult(prompt_len=len(r.prompt)) for r in reqs]
+        results = [GenerationResult(prompt_len=len(r.prompt),
+                                    arrival_step=r.arrival_step)
+                   for r in reqs]
         self._results = results
 
         self.events.clear()
@@ -281,17 +315,27 @@ class Engine:
         spec_dec = self.spec_dec
         if spec_dec is not None:
             spec_dec.reset()
-        queue: list[int] = list(range(n))
+        # the ARRIVAL plane: a request is invisible to admission (and to the
+        # step policy's queue-depth signals) until the engine-step clock
+        # reaches its arrival_step. `pending` is arrival-ordered (FIFO ties
+        # by submission index); `queue` holds only arrived requests.
+        pending: list[int] = sorted(range(n),
+                                    key=lambda r: (reqs[r].arrival_step, r))
+        queue: list[int] = []
         cur_tok = np.zeros((self.slots,), np.int32)
         stream: Optional[_Prefill] = None
         ready: Optional[_Ready] = None
         self._pending_reuse = 0
         self._clock = 0
+        self._arrived_unstamped = 0
+        self._queue_depth = 0
+        self._last_ev: Optional[ScheduleEvent] = None
         self._cancel.clear()
         self._in_serve = True
         iters = 0
         limit = self.step_limit if self.step_limit is not None else (
-            64 + 8 * sum(len(r.prompt) + r.max_new_tokens for r in reqs))
+            64 + max((r.arrival_step for r in reqs), default=0)
+            + 8 * sum(len(r.prompt) + r.max_new_tokens for r in reqs))
 
         def ext_prompt(r: int) -> list[int]:
             """Admission token span: prompt + already-emitted tokens, so a
@@ -299,22 +343,36 @@ class Engine:
             return list(reqs[r].prompt) + results[r].tokens
 
         def emit(si: int, tok: int) -> None:
-            """Record one token for slot ``si``; retire the lane when done."""
+            """Record one token for slot ``si``; retire the lane when done.
+
+            Latency marks land here: tokens materialize at the boundary the
+            step's event just advanced the clock to, so ``self._clock`` IS
+            the token's engine-step timestamp (and the event the token is
+            attributed to is the most recently pushed one).
+            """
             s = pool.get(si)
             r = reqs[s.req]
-            results[s.req].tokens.append(tok)
+            res = results[s.req]
+            res.tokens.append(tok)
+            if res.first_token_step is None:
+                res.first_token_step = self._clock
+                if self._last_ev is not None:
+                    self._last_ev.first_tokens += 1
+            if self._last_ev is not None:
+                self._last_ev.emitted_tokens += 1
             if r.on_token is not None:
                 r.on_token(tok)
             s.emitted += 1
             s.ctx += 1
             eos = self._eos[s.req]
             if eos is not None and tok == eos:
-                results[s.req].finish_reason = FINISH_EOS
+                res.finish_reason = FINISH_EOS
             elif s.emitted >= s.budget:
-                results[s.req].finish_reason = FINISH_LENGTH
+                res.finish_reason = FINISH_LENGTH
             else:
                 return
-            results[s.req].state = RequestState.FINISHED
+            res.state = RequestState.FINISHED
+            res.finish_step = self._clock
             pool.retire(si)
             if spec_dec is not None:  # the draft mirror never outlives it
                 spec_dec.retire_lane(si)
@@ -391,9 +449,15 @@ class Engine:
             results[r].state = state
             results[r].finish_reason = reason
             results[r].error = error
+            results[r].finish_step = self._clock
 
         def sweep() -> None:
-            """Step-boundary enforcement: cancellations, then deadlines."""
+            """Step-boundary enforcement: cancellations, then deadlines.
+
+            Deadlines are measured from each request's ARRIVAL step (legacy
+            arrival 0 == from serve() start), so a late arrival's budget
+            starts when it becomes visible, not when the drain began.
+            """
             for r in sorted(self._cancel):
                 if results[r].state not in TERMINAL_STATES:
                     evict(r, RequestState.CANCELLED, FINISH_CANCELLED)
@@ -403,19 +467,43 @@ class Engine:
                 if results[r].state in TERMINAL_STATES:
                     continue
                 rq = reqs[r]
+                arr = rq.arrival_step
                 if (rq.ttft_deadline is not None and not results[r].tokens
-                        and self._clock >= rq.ttft_deadline):
+                        and self._clock >= arr + rq.ttft_deadline):
                     evict(r, RequestState.TIMED_OUT, FINISH_TIMEOUT,
                           f"no first token by ttft_deadline="
-                          f"{rq.ttft_deadline} (step {self._clock})")
-                    H["timeouts"] += 1
-                elif rq.deadline is not None and self._clock >= rq.deadline:
-                    evict(r, RequestState.TIMED_OUT, FINISH_TIMEOUT,
-                          f"not finished by deadline={rq.deadline} "
+                          f"{rq.ttft_deadline} steps after arrival {arr} "
                           f"(step {self._clock})")
                     H["timeouts"] += 1
+                elif (rq.deadline is not None
+                        and self._clock >= arr + rq.deadline):
+                    evict(r, RequestState.TIMED_OUT, FINISH_TIMEOUT,
+                          f"not finished by deadline={rq.deadline} steps "
+                          f"after arrival {arr} (step {self._clock})")
+                    H["timeouts"] += 1
 
-        while queue or stream is not None or ready is not None \
+        def admit_arrivals() -> None:
+            """Move requests whose arrival step the clock has reached from
+            the pending plane into the admission queue (arrival order)."""
+            while pending and reqs[pending[0]].arrival_step <= self._clock:
+                r = pending.pop(0)
+                if results[r].state not in TERMINAL_STATES:
+                    queue.append(r)
+                    self._arrived_unstamped += 1
+
+        def ttft_slack() -> Optional[int]:
+            """Tightest TTFT slack among first-token-less live requests that
+            declare a ttft_deadline (arrived or in admission); None if none
+            do. The step policy reads this as deadline pressure."""
+            slacks = [reqs[r].arrival_step + reqs[r].ttft_deadline - self._clock
+                      for r in range(n)
+                      if reqs[r].ttft_deadline is not None
+                      and reqs[r].arrival_step <= self._clock
+                      and results[r].state not in TERMINAL_STATES
+                      and results[r].first_token_step is None]
+            return min(slacks) if slacks else None
+
+        while queue or pending or stream is not None or ready is not None \
                 or pool.has_work():
             iters += 1
             if iters > limit:
@@ -425,7 +513,22 @@ class Engine:
                               f"watchdog: step limit {limit} exceeded")
                         H["failures"] += 1
                 break
+            admit_arrivals()
             sweep()
+            self._queue_depth = len(queue)
+
+            # -- nothing to run but arrivals still due: jump the clock to
+            # the next arrival as ONE zero-work idle event (pimsim prices
+            # it at zero busy time; the gap is recorded so replays map the
+            # engine clock onto the simulated timeline exactly)
+            if (not queue and stream is None and ready is None
+                    and not pool.has_work() and pending):
+                gap = reqs[pending[0]].arrival_step - self._clock
+                self._require(gap > 0, "idle jump planned with a due arrival")
+                self._push_event(ScheduleEvent(
+                    plan_step(self.mode, False, False, 0), 0, 0,
+                    idle_steps=gap))
+                continue
 
             # -- a parked request takes the first freed lane
             if ready is not None and pool.free_slots():
@@ -458,7 +561,11 @@ class Engine:
             # -- stage the next pending request (one admission in flight)
             if stream is None and ready is None and queue:
                 r = queue.pop(0)
+                self._queue_depth = len(queue)
                 results[r].state = RequestState.ADMITTED
+                if results[r].admit_step is None:  # first admission only:
+                    results[r].admit_step = self._clock  # re-queues after
+                #                          preemption never re-count waiting
                 p = ext_prompt(r)
                 if not pool.policy.chunkable:
                     # ring-cache configs: the W-slot ring is a steady-state
@@ -477,25 +584,58 @@ class Engine:
             # bandwidth, so the controller lets the processor run a bigger
             # prefill quantum per step the more lanes sit empty (1x when the
             # stream merely runs ahead of retirement, up to `slots`x when the
-            # pool is starved). Quanta are whole multiples of `chunk` with at
-            # most one sub-chunk tail per prompt, so the fused/prefill program
-            # shapes — and the jit cache — stay bounded by slots + chunk.
+            # pool is starved). Under speculation lanes drain budgets up to
+            # (k+1)x faster than retirements alone suggest, so the quantum
+            # also scales with the EMITTED-token rate of the last decode
+            # event (`spec_refill`) — refilling by retirements only starves
+            # the very batch the verify GEMM win depends on. Quanta stay
+            # whole multiples of `chunk` with at most one sub-chunk tail per
+            # prompt, so the fused/prefill program shapes — and the jit
+            # cache — stay bounded by (slots + spec depth) x chunk.
             c = 0
             if stream is not None:
                 n_free = len(pool.free_slots())
+                boost = max(1, n_free)
+                if (self.spec_refill and spec_dec is not None
+                        and self._last_ev is not None
+                        and self._last_ev.decode_batch > 0):
+                    e = self._last_ev
+                    per_lane = -(-e.emitted_tokens // e.decode_batch)
+                    boost = max(boost, per_lane)
                 if stream.remaining >= self.chunk:
-                    c = self.chunk * min(max(1, n_free),
+                    c = self.chunk * min(boost,
                                          stream.remaining // self.chunk)
                 else:
                     c = stream.remaining
+            # -- per-step mode: the step policy (when installed) resolves
+            # LBIM-vs-HBCEM and speculative participation from the live
+            # queue-depth / deadline-slack signals; otherwise the static
+            # `mode` pin governs, with speculation always allowed.
+            choice = StepChoice(self.mode)
+            if self.step_policy is not None:
+                choice = self.step_policy.choose(StepSignals(
+                    clock=self._clock, active=len(active),
+                    free=len(pool.free_slots()),
+                    queue_depth=len(queue), pending_arrivals=len(pending),
+                    stream_remaining=(stream.remaining
+                                      if stream is not None else 0),
+                    backlog_prefill_tokens=sum(
+                        len(ext_prompt(r)) for r in queue),
+                    backlog_decode_tokens=sum(
+                        reqs[r].max_new_tokens - len(results[r].tokens)
+                        for r in queue),
+                    min_ttft_slack=ttft_slack()))
+            step_mode = choice.mode
             # -- speculative draft depth per lane: the engine-wide k, capped
             # by the request's own spec_k and by its remaining budget (the
             # verify round emits at most k+1 tokens; the last budgeted token
             # needs no speculation). Computed BEFORE planning so a round
             # where nothing drafts is a plain decode step, not a mislabeled
-            # (and mispriced) SPEC_VERIFY.
+            # (and mispriced) SPEC_VERIFY. A policy that withholds spec this
+            # step leaves spec_ks empty — draft lanes stay synced through
+            # the plain path's note_emitted.
             spec_ks: dict[int, int] = {}
-            if spec_dec is not None:
+            if spec_dec is not None and choice.allow_spec:
                 for si in active:
                     s = pool.get(si)
                     rk = reqs[s.req].spec_k
@@ -503,7 +643,7 @@ class Engine:
                                 self.spec.k, s.budget - s.emitted - 1)
                     if k_eff > 0:
                         spec_ks[si] = k_eff
-            plan = plan_step(self.mode, bool(active), stream is not None, c,
+            plan = plan_step(step_mode, bool(active), stream is not None, c,
                              spec=bool(spec_ks))
             if stream is not None and c > 0:
                 # page-in the stream's write blocks for this quantum
@@ -656,7 +796,7 @@ class Engine:
                 plan, len(active), c if plan.prefill_chunk else 0,
                 max((pool.get(i).ctx for i in active), default=0),
                 self._take_reuse(), attempts=attempts, slow_penalty=slow,
-                degraded=ladder.is_degraded(),
+                degraded=ladder.is_degraded(), mode=step_mode.value,
                 # a spec step is priced as one weights-resident verify GEMM,
                 # not K+1 split-KV GEMV sweeps, so it doesn't fan out
                 kv_splits=(max(1, self.cfg.decode_kv_splits)
@@ -691,10 +831,12 @@ class Engine:
                     results[r].state = RequestState.FAILED
                     results[r].finish_reason = FINISH_FAILED
                     results[r].error = err
+                    results[r].finish_step = self._clock
                 if stream is not None:
                     results[stream.req].state = RequestState.FAILED
                     results[stream.req].finish_reason = FINISH_FAILED
                     results[stream.req].error = err
+                    results[stream.req].finish_step = self._clock
                     stream = None
                     pool.release_staging()
                 continue
@@ -744,9 +886,12 @@ class Engine:
                 results[r].error = (results[r].error
                                     or "engine exited with request "
                                        "non-terminal")
+                results[r].finish_step = self._clock
                 H["failures"] += 1
+        self.last_requests = reqs       # SLO telemetry (schedule_report)
         del self._reqs, self._eos, self._base_keys
         self.last_cache = pool.views()  # introspection / tests
+        self.last_results = results     # latency telemetry (schedule_report)
         return results
 
     def cancel(self, request_index: int) -> None:
@@ -953,6 +1098,8 @@ class Engine:
         for group in groups:
             for r in group:
                 results[r].state = RequestState.ADMITTED
+                if results[r].admit_step is None:  # set-once, as staged path
+                    results[r].admit_step = self._clock
             glens = [len(ext[r]) for r in group]
             toks = np.zeros((len(group), max(glens)), np.int32)
             for j, r in enumerate(group):
@@ -994,23 +1141,34 @@ class Engine:
 
     def schedule_report(self) -> ScheduleReport:
         self._require(self.pool is not None, "schedule_report() without a pool")
+        from repro.serve.traffic import latency_summary  # cycle-free (lazy)
         fused = sum(1 for e in self.events if e.plan.fused)
         decode_events = [e for e in self.events if e.plan.decode]
+        mode_steps: dict[str, int] = {}
+        for e in self.events:
+            if e.idle_steps:
+                continue  # idle jumps are clock bookkeeping, not mode picks
+            mode_steps[e.mode] = mode_steps.get(e.mode, 0) + 1
         return ScheduleReport({
             "steps": len(self.events),
             "fused_steps": fused,
             "modes": {e.plan.label for e in self.events},
+            "mode_steps": mode_steps,
             "decode_steps": len(decode_events),
             "decode_slot_steps": sum(e.decode_batch for e in decode_events),
             "idle_slot_steps": sum(self.slots - e.decode_batch
                                    for e in decode_events),
             "prefill_tokens": sum(e.prefill_tokens for e in self.events),
             "reused_prefix_tokens": sum(e.reused_tokens for e in self.events),
+            "arrivals": sum(e.arrivals for e in self.events),
+            "idle_steps": sum(e.idle_steps for e in self.events),
             "prefix": self.pool.prefix_report(),
             "retried_step_attempts": sum(e.attempts - 1 for e in self.events),
             "degraded_steps": sum(1 for e in self.events if e.degraded),
             "slow_penalty_steps": sum(e.slow_penalty for e in self.events),
             "spec": self._spec_report(),
+            "latency": latency_summary(self.last_results or [],
+                                       self.last_requests),
             "health": self.health(),
         })
 

@@ -3,9 +3,15 @@
 Maps incoming ``GenerationRequest``s onto the engine's persistent decode
 pool by mode policy (the paper's workload framing: memory-intensive =
 short-in/long-out favors HBCEM; compute-intensive = long-in/short-out favors
-LBIM). ``auto`` picks LBIM when the queue's aggregate prefill work dominates
-its decode work — the same TTFT-vs-decode trade the paper's Fig. 6/7 sweep
-demonstrates.
+LBIM). ``auto`` now works at BOTH horizons: the queue-level heuristic
+(``_pick_mode`` — LBIM when the queue's aggregate prefill work dominates its
+decode work, the TTFT-vs-decode trade of the paper's Fig. 6/7 sweep) sets
+the engine's baseline pin, and a per-step :class:`~repro.core.pim_modes.
+SloAwarePolicy` is installed on the engine so each STEP re-decides from the
+live queue-depth / deadline-slack signals — fusing admission under queue
+pressure and withholding speculative rounds while a waiting request's TTFT
+is at stake. A static ``mode_policy`` clears the step policy: the pin
+governs every step, as before.
 
 Admission is incremental: the engine chunk-prefills queued requests into
 lanes as they free, each request decodes exactly to its OWN
@@ -29,7 +35,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.pim_modes import Mode
+from repro.core.pim_modes import Mode, SloAwarePolicy
 from repro.serve.api import (FINISH_CANCELLED, GenerationRequest,
                              GenerationResult, RequestState, SamplingParams)
 from repro.serve.engine import Engine
@@ -53,15 +59,19 @@ class Scheduler:
                priority: int = 0,
                ttft_deadline: Optional[int] = None,
                deadline: Optional[int] = None,
-               spec_k: Optional[int] = None) -> int:
+               spec_k: Optional[int] = None,
+               arrival_step: int = 0) -> int:
         """Queue one request; returns its request id. ``spec_k`` caps this
         request's speculative draft depth (0 opts it out; None defers to the
-        engine's ``SpecConfig.k``)."""
+        engine's ``SpecConfig.k``). ``arrival_step`` places the request on
+        the engine's arrival plane: invisible to admission until the engine-
+        step clock reaches it, deadlines measured from it."""
         return self.submit_request(GenerationRequest(
             prompt=prompt, max_new_tokens=max_new, eos_id=eos_id,
             sampling=sampling if sampling is not None else SamplingParams(),
             on_token=on_token, priority=priority,
-            ttft_deadline=ttft_deadline, deadline=deadline, spec_k=spec_k))
+            ttft_deadline=ttft_deadline, deadline=deadline, spec_k=spec_k,
+            arrival_step=arrival_step))
 
     def submit_request(self, request: GenerationRequest) -> int:
         if self.max_queue > 0 and len(self.queue) >= self.max_queue:
@@ -118,6 +128,11 @@ class Scheduler:
         if not self.queue:
             return {}
         self.engine.mode = self._pick_mode()
+        # auto: the queue-level pick is only the baseline — install the
+        # per-step SLO-aware policy so each step re-decides from live
+        # signals. Static policies clear it: the pin governs every step.
+        self.engine.step_policy = (SloAwarePolicy()
+                                   if self.mode_policy == "auto" else None)
         batch = list(self.queue)
         self.queue.clear()
         reqs = [dataclasses.replace(r, eos_id=eos_id) if eos_id is not None
